@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+def mc(fn: Callable, cfg, R: int, reps: int, seed0: int = 0) -> Dict[str, float]:
+    """Monte-Carlo mean/std of fn(key, cfg, R)["T"] over ``reps`` draws."""
+    ts = []
+    for r in range(reps):
+        ts.append(fn(jax.random.PRNGKey(seed0 * 100003 + r), cfg, R)["T"])
+    a = np.asarray(ts)
+    return {"mean": float(a.mean()), "std": float(a.std()),
+            "sem": float(a.std() / np.sqrt(len(a)))}
+
+
+def emit(name: str, rows: List[dict], derived: str = "") -> None:
+    """Write JSON artifact + the harness CSV line ``name,us_per_call,derived``."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    print(f"{name},-,{derived}")
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r) if hasattr(r, "block_until_ready") else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    try:
+        jax.block_until_ready(r)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6, r  # us per call

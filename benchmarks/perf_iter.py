@@ -1,0 +1,64 @@
+"""§Perf hillclimb driver: re-lower a dry-run cell with knob overrides and
+diff the roofline terms against the paper-faithful baseline.
+
+Usage (one iteration):
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen3-moe-235b-a22b \
+      --shape train_4k --set remat_policy=dots --tag it1
+
+Results land in experiments/perf/<arch>__<shape>__<tag>.json with the
+baseline deltas precomputed; EXPERIMENTS.md §Perf records the
+hypothesis → change → before → after → verdict chain.
+"""
+
+import argparse
+import json
+import pathlib
+
+PERF_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "perf"
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="knob=value (remat_policy=dots, n_micro=4, ...)")
+    ap.add_argument("--tag", required=True)
+    args = ap.parse_args()
+
+    opts = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        opts[k] = int(v) if v.isdigit() else v
+    # reset module-level knobs after the run so the process stays clean
+    from repro.models.moe import set_moe_opts
+
+    from repro.launch.dryrun import run_cell
+
+    res = run_cell(args.arch, args.shape, args.mesh == "multi", opts=opts)
+    res["opts"] = opts
+    base_p = DRYRUN_DIR / f"{args.arch}__{args.shape}__{args.mesh}.json"
+    if base_p.exists():
+        base = json.loads(base_p.read_text())
+        if base.get("status") == "ok" and res.get("status") == "ok":
+            b, n = base["roofline"], res["roofline"]
+            res["delta_vs_baseline"] = {
+                k: {"before": b[k], "after": n[k],
+                    "change": (n[k] - b[k]) / b[k] if b[k] else None}
+                for k in ("compute_s", "memory_s", "collective_s")
+            }
+            res["baseline_dominant"] = b["dominant"]
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    out = PERF_DIR / f"{args.arch}__{args.shape}__{args.tag}.json"
+    out.write_text(json.dumps(res, indent=1, default=str))
+    if "delta_vs_baseline" in res:
+        for k, d in res["delta_vs_baseline"].items():
+            print(f"{k}: {d['before']:.4f}s -> {d['after']:.4f}s "
+                  f"({d['change']:+.1%})")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

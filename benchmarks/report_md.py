@@ -1,0 +1,103 @@
+"""Render the dry-run + bench JSON artifacts into EXPERIMENTS.md sections
+(markdown tables). Run after the sweep + benchmarks:
+
+  PYTHONPATH=src python -m benchmarks.report_md > experiments/report.md
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent / "experiments"
+
+
+def _load(d):
+    out = []
+    for p in sorted((ROOT / d).glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def dryrun_tables():
+    cells = _load("dryrun")
+    print("### Dry-run summary\n")
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skip"]
+    fail = [c for c in cells if c["status"] == "fail"]
+    print(f"- cells: {len(cells)} total = {len(ok)} compiled ok, "
+          f"{len(skip)} skipped (long_500k on full-attention archs), "
+          f"{len(fail)} failed\n")
+    if fail:
+        for c in fail:
+            print(f"  - FAIL {c['arch']} {c['shape']} {c['mesh']}: {c['error']}")
+        print()
+
+    print("### Per-device memory (single-pod cells)\n")
+    print("| arch | shape | params/dev | args/dev | temp/dev | cache/dev |")
+    print("|---|---|---|---|---|---|")
+    for c in ok:
+        if c["mesh"] != "single":
+            continue
+        m = c.get("memory", {})
+        gb = lambda k: (f"{m[k]/1e9:.2f} GB" if k in m else "-")
+        print(f"| {c['arch']} | {c['shape']} | "
+              f"{gb('param_bytes_per_device_est')} | "
+              f"{gb('argument_size_in_bytes')} | {gb('temp_size_in_bytes')} | "
+              f"{gb('cache_bytes_per_device_est')} |")
+    print()
+
+    for mesh in ("single", "multi"):
+        print(f"### Roofline table — {mesh} pod "
+              f"({'256' if mesh == 'single' else '512'} chips)\n")
+        print("| arch | shape | compute | memory | collective | dominant |"
+              " useful flops | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for c in cells:
+            if c["mesh"] != mesh:
+                continue
+            if c["status"] == "skip":
+                print(f"| {c['arch']} | {c['shape']} | SKIP | | | "
+                      f"{c['skip_reason'][:40]}… | | |")
+                continue
+            if c["status"] != "ok":
+                continue
+            r = c["roofline"]
+            ur = r.get("useful_flops_ratio")
+            rf_ = r.get("roofline_fraction")
+            ur_s = f"{ur:.2f}" if ur is not None else "-"
+            rf_s = f"{rf_*100:.2f}%" if rf_ is not None else "-"
+            print(f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+                  f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                  f"{r['dominant']} | {ur_s} | {rf_s} |")
+        print()
+
+
+def perf_tables():
+    runs = _load("perf")
+    if not runs:
+        return
+    print("### Perf iterations (raw artifacts)\n")
+    print("| cell | opts | compute | memory | collective | dominant |")
+    print("|---|---|---|---|---|---|")
+    for c in runs:
+        if c.get("status") != "ok":
+            continue
+        r = c["roofline"]
+        print(f"| {c['arch']}/{c['shape']}/{c['mesh']} | {c.get('opts')} | "
+              f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+              f"{fmt_s(r['collective_s'])} | {r['dominant']} |")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_tables()
+    perf_tables()

@@ -1,0 +1,71 @@
+"""Aggregate the dry-run JSON cells into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
+the per-(arch x shape x mesh) roofline terms, dominant bottleneck, useful-
+flops ratio, and a one-line what-would-move-it hint.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+HINTS = {
+    "compute": "raise arithmetic efficiency: fuse encode into matmul, drop remat recompute, larger per-device tiles",
+    "memory": "cut HBM traffic: Pallas flash attention (no materialized scores), fp32->bf16 intermediates, fuse norms into matmuls",
+    "collective": "shrink wire bytes: reduce-scatter+all-gather instead of all-reduce, overlap grad AR with backward, quantized (bf16) gradient AR",
+}
+
+
+def run() -> dict:
+    rows = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            rows.append({
+                "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+                "status": d["status"],
+                "reason": d.get("skip_reason") or d.get("error"),
+            })
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "model_flops": r["model_flops"], "hlo_flops": r["hlo_flops"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+            "hint": HINTS[r["dominant"]],
+        })
+    ok = [r for r in rows if r["status"] == "ok"]
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_fail = sum(r["status"] == "fail" for r in rows)
+    worst = min(ok, key=lambda r: r["roofline_fraction"] or 1) if ok else None
+    emit("roofline", rows,
+         derived=f"cells_ok={len(ok)};skip={n_skip};fail={n_fail};"
+                 f"worst={worst['arch']}/{worst['shape'] if worst else ''}")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    out = run()
+    fmt = "{:24s} {:12s} {:6s} {:>9s} {:>9s} {:>9s} {:>10s} {:>7s}"
+    print(fmt.format("arch", "shape", "mesh", "compute", "memory",
+                     "collect", "dominant", "roof%"))
+    for r in out["rows"]:
+        if r["status"] != "ok":
+            print(fmt.format(r["arch"], r["shape"], r["mesh"], "-", "-", "-",
+                             r["status"], "-"))
+            continue
+        print(fmt.format(
+            r["arch"], r["shape"], r["mesh"],
+            f"{r['compute_s']*1e3:.1f}ms", f"{r['memory_s']*1e3:.1f}ms",
+            f"{r['collective_s']*1e3:.1f}ms", r["dominant"],
+            f"{(r['roofline_fraction'] or 0)*100:.1f}",
+        ))

@@ -1,0 +1,70 @@
+"""Benchmark harness: one entry per paper table/figure + framework extras.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is '-' for
+simulation benchmarks whose deliverable is the derived statistics).
+
+  fig3        — delay vs rows, Scenarios 1/2 (paper Fig. 3)
+  fig4        — delay vs rows, mu in {1,3,9} (paper Fig. 4)
+  fig5        — CCP vs best/naive gaps on slow links (paper Fig. 5)
+  efficiency  — measured vs eq.(12) efficiency (paper §6 table)
+  overhead    — fountain codec failure prob + O(R) timing (paper §2 claims)
+  kernel      — Pallas hot-spot roofline accounting (beyond-paper)
+  roofline    — aggregate the dry-run cells (EXPERIMENTS.md §Roofline)
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+Subset:          PYTHONPATH=src python -m benchmarks.run --only fig3,fig5
+Fast smoke:      PYTHONPATH=src python -m benchmarks.run --fast
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced rep counts (CI smoke)")
+    args = ap.parse_args()
+
+    from . import efficiency, fig3, fig4, fig5, kernel_bench, overhead, roofline_report
+
+    reps = 8 if args.fast else 40
+    sweep = (500, 1000) if args.fast else (1000, 2000, 4000, 8000)
+    jobs = {
+        "fig3": lambda: fig3.run(reps=reps, r_sweep=sweep),
+        "fig4": lambda: fig4.run(reps=reps, r_sweep=sweep),
+        "fig5": lambda: fig5.run(reps=max(reps // 2, 5),
+                                 r_sweep=(200, 400) if args.fast
+                                 else (200, 400, 800, 1600)),
+        "efficiency": lambda: efficiency.run(reps=4 if args.fast else 20,
+                                             R=2000 if args.fast else 8000),
+        "overhead": overhead.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline_report.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(jobs)
+    failed = []
+    print("name,us_per_call,derived")
+    for name, job in jobs.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            job()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

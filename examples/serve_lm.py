@@ -1,0 +1,59 @@
+"""Serving example: batched prefill/decode + CCP dispatch over heterogeneous
+replicas.
+
+Two engine replicas serve request batches; one replica is artificially
+slowed (the paper's heterogeneous helper). The CCPDispatcher learns the
+speed ratio from completion telemetry and shifts load — the serving-side
+realization of Algorithm 1.
+
+PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.serve_loop import CCPDispatcher, ServeEngine
+
+
+def main():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_len=64)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=(4, 16)).astype(np.int32)
+               for _ in range(24)]
+
+    # sanity: greedy generation is deterministic
+    out1 = engine.generate(prompts[0], n_new=8)
+    out2 = engine.generate(prompts[0], n_new=8)
+    assert np.array_equal(out1, out2)
+    print(f"generated {out1.shape[1]} tokens/request, batch {out1.shape[0]}")
+
+    def fast(batch):
+        return engine.generate(batch, n_new=4)
+
+    def slow(batch):
+        time.sleep(0.15)  # helper with less compute
+        return engine.generate(batch, n_new=4)
+
+    disp = CCPDispatcher([fast, slow])
+    results, allocs = disp.run(prompts)
+    assert all(r is not None for r in results)
+    first, last = allocs[0], allocs[-1]
+    print(f"first-round allocation {first.tolist()} -> last {last.tolist()}")
+    print(f"fast-replica share grew from {first[0]/first.sum():.0%} to "
+          f"{last[0]/last.sum():.0%} (CCP eq. 23 at the serving layer)")
+
+
+if __name__ == "__main__":
+    main()

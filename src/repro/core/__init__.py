@@ -1,0 +1,6 @@
+"""The paper's primary contribution: Computation Control Protocol (CCP) —
+fountain-coded cooperative computation with dynamic, heterogeneity-aware
+task allocation — plus its TPU-native realizations (coded matmul, coded
+gradient aggregation, CCP-driven scheduling)."""
+
+from . import baselines, ccp, fountain, simulator, theory  # noqa: F401

@@ -1,0 +1,137 @@
+"""Baselines from §6: Uncoded (two allocations) and HCMM [Reisizadeh et al.].
+
+Uncoded: ``r_n`` *uncoded* packets are pre-assigned to helper ``n`` (summing
+to exactly R — no coding, so *every* helper must finish).  Two allocation
+rules from the paper: proportional to 1/E[beta_n] ('mean') and proportional
+to mu_n ('mu').
+
+HCMM (arXiv:1701.05973): each helper gets a fixed block of MDS-coded rows,
+sized by the asymptotically-optimal load. The collector finishes when the
+loads of *fully finished* helpers sum to >= R.  Load solver: helper n's
+per-time expected useful rate is rho(lmbda) = lmbda * (1 - e^{mu a - mu/lmbda});
+the optimum lmbda* solves  ln(1 + u + mu*a) = u  with  u = mu/lmbda - mu*a,
+then tau* = R / sum_n rho_n(lmbda_n*)  and  ell_n = lmbda_n* tau*.
+
+Both baselines share the CCP simulator's link/compute timing model so the
+comparison is apples-to-apples.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import theory
+from .simulator import ScenarioConfig, draw_helpers, draw_packet_tables
+
+__all__ = ["uncoded_allocation", "hcmm_loads", "run_uncoded", "run_hcmm"]
+
+
+# ---------------------------------------------------------------------------
+# Allocations
+# ---------------------------------------------------------------------------
+
+def uncoded_allocation(R: int, mu, a, rule: str) -> np.ndarray:
+    """Integer loads summing to R; rule in {'mean', 'mu'}."""
+    mu = np.asarray(mu, dtype=np.float64)
+    a = np.asarray(a, dtype=np.float64)
+    if rule == "mean":
+        w = 1.0 / theory.shifted_exp_mean(a, mu)
+    elif rule == "mu":
+        w = mu.copy()
+    else:
+        raise ValueError(f"unknown rule {rule!r}")
+    loads = R * w / w.sum()
+    return theory.largest_remainder_round(loads, R)
+
+
+def _hcmm_u_star(mu_a: float) -> float:
+    """Solve ln(1 + u + mu*a) = u for u > 0 (Newton; unique positive root)."""
+    u = max(mu_a, 1.0)
+    for _ in range(100):
+        f = np.log1p(u + mu_a) - u
+        fp = 1.0 / (1.0 + u + mu_a) - 1.0
+        step = f / fp
+        u_new = u - step
+        if u_new <= 0:
+            u_new = u / 2.0
+        if abs(u_new - u) < 1e-12:
+            u = u_new
+            break
+        u = u_new
+    return float(u)
+
+
+def hcmm_loads(R: int, mu, a) -> np.ndarray:
+    """HCMM asymptotically-optimal per-helper loads (integers)."""
+    mu = np.asarray(mu, dtype=np.float64)
+    a = np.asarray(a, dtype=np.float64)
+    lam = np.empty_like(mu)
+    rho = np.empty_like(mu)
+    for n in range(mu.shape[0]):
+        u = _hcmm_u_star(mu[n] * a[n])
+        lam[n] = mu[n] / (u + mu[n] * a[n])
+        rho[n] = lam[n] * (1.0 - np.exp(-u))
+    tau = R / rho.sum()
+    loads = lam * tau
+    total = int(np.ceil(loads.sum()))
+    return theory.largest_remainder_round(loads, total)
+
+
+# ---------------------------------------------------------------------------
+# Simulation of block-assigned baselines
+# ---------------------------------------------------------------------------
+
+def _block_finish_times(cfg: ScenarioConfig, key, R: int, loads: np.ndarray,
+                        mu, a, rate) -> np.ndarray:
+    """Finish time (last computed result at collector) per helper for a fixed
+    pre-assigned block of ``loads[n]`` packets, streaming back-to-back sends."""
+    M = int(loads.max())
+    if M == 0:
+        return np.zeros(cfg.N)
+    beta, d_up, d_ack, d_down = draw_packet_tables(key, cfg, mu, a, rate, M, R)
+    # Uplink serialized: packet i arrives at cumsum(d_up)[i].
+    arrive = jnp.cumsum(d_up, axis=1)
+
+    def step(done_prev, x):
+        done = jnp.maximum(x[0], done_prev) + x[1]
+        return done, done
+
+    _, done = jax.lax.scan(
+        step, jnp.zeros(cfg.N), (arrive.T, beta.T)
+    )
+    done = done.T  # (N, M)
+    tr = done + d_down
+    loads_j = jnp.asarray(loads)
+    idx = jnp.clip(loads_j - 1, 0, M - 1)
+    t_n = jnp.take_along_axis(tr, idx[:, None], axis=1)[:, 0]
+    return np.asarray(jnp.where(loads_j > 0, t_n, 0.0))
+
+
+def run_uncoded(key, cfg: ScenarioConfig, R: int, rule: str = "mean") -> Dict:
+    """Uncoded baseline: every helper must finish its block; T = max_n."""
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = draw_helpers(k_h, cfg)
+    loads = uncoded_allocation(R, mu, a, rule)
+    t_n = _block_finish_times(cfg, k_p, R, loads, mu, a, rate)
+    return dict(T=float(np.max(t_n)), loads=loads, mu=np.asarray(mu), a=np.asarray(a))
+
+
+def run_hcmm(key, cfg: ScenarioConfig, R: int) -> Dict:
+    """HCMM: completion when finished helpers' loads sum to >= R."""
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = draw_helpers(k_h, cfg)
+    loads = hcmm_loads(R, np.asarray(mu), np.asarray(a))
+    t_n = _block_finish_times(cfg, k_p, R, loads, mu, a, rate)
+    order = np.argsort(t_n)
+    agg = np.cumsum(loads[order])
+    pos = int(np.searchsorted(agg, R))
+    if pos >= cfg.N:  # insufficient aggregate redundancy (shouldn't happen)
+        pos = cfg.N - 1
+    return dict(
+        T=float(t_n[order][pos]), loads=loads,
+        mu=np.asarray(mu), a=np.asarray(a),
+    )

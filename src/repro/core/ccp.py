@@ -1,0 +1,150 @@
+"""Computation Control Protocol (CCP) — Algorithm 1 of the paper.
+
+The collector cannot observe per-packet compute times ``beta_{n,i}``; it only
+sees packet send times and ACK arrival times.  CCP estimates ``E[beta]`` per
+helper from that information and drives the transmission interval ``TTI`` to
+it (eq. 8), with TCP-style multiplicative backoff on timeout.
+
+Everything here is written as *pure, vectorized state-update functions over
+per-helper arrays* so the exact same arithmetic is used by
+
+  * :mod:`repro.core.simulator` — the paper-faithful discrete-event
+    reproduction (Scenarios 1 & 2, Figs. 3-5), and
+  * :mod:`repro.core.scheduler` — the TPU runtime scheduler, where the
+    "helpers" are devices/hosts and the ACK timestamps are step-time
+    telemetry.
+
+Paper equation map:
+  eq. (2)  XTT_{n,i+1} = Tr_{n,i} - Tx_{n,i+1}          (residual time)
+  eq. (3)  RTT^data    = (Bx+Br)/(Bx+Back) * RTT^ack    (size rescale)
+  eq. (4)  RTT^data    <- alpha*sample + (1-alpha)*ewma (EWMA)
+  eq. (5)  E[beta]     = (Tc - Tu) / m                  (busy time / packets)
+  eq. (6)  Tc          = Tr - Br/(Bx+Br) * RTT^data     (finish-time estimate)
+  eq. (7)  Tu          <- Tu + max(0, RTT^data - XTT)   (under-utilization)
+  eq. (8)  TTI         = min(Tr - Tx, E[beta])
+  l.13-14  timeout: TTI <- 2*TTI ; TO = 2*(TTI + RTT^data)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CCPConfig", "CCPState", "init_state", "on_computed", "on_timeout", "tti"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CCPConfig:
+    """Packet-size and smoothing constants (paper §6 defaults).
+
+    Bx is the transmitted-packet size in bits (8R in the paper: one byte per
+    matrix entry per row), Br the computed-result size, Back the ACK size.
+    ``alpha`` is the EWMA weight of eq. (4); the paper does not pin it — we
+    default to 0.25 (between TCP's 1/8 and a fast-adapting 1/2) and expose it.
+    """
+
+    Bx: float
+    Br: float = 8.0
+    Back: float = 1.0
+    alpha: float = 0.25
+
+    @property
+    def data_scale(self) -> float:
+        """eq. (3): RTT^data / RTT^ack."""
+        return (self.Bx + self.Br) / (self.Bx + self.Back)
+
+    @property
+    def back_frac(self) -> float:
+        """eq. (6): backward-trip fraction of RTT^data."""
+        return self.Br / (self.Bx + self.Br)
+
+    @property
+    def fwd_frac(self) -> float:
+        """Alg. 1 line 7: forward-trip fraction of RTT^ack."""
+        return self.Bx / (self.Bx + self.Back)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CCPState:
+    """Per-helper estimator state; every field is an (N,)-array."""
+
+    rtt_data: jnp.ndarray  # EWMA of eq. (4)
+    Tu: jnp.ndarray        # cumulative under-utilization estimate, eq. (7)
+    m: jnp.ndarray         # packets processed (int)
+    e_beta: jnp.ndarray    # eq. (5)
+    tti_backoff: jnp.ndarray  # multiplicative factor from timeouts (l.13)
+
+    def replace(self, **kw) -> "CCPState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_state(n: int, dtype=jnp.float32) -> CCPState:
+    return CCPState(
+        rtt_data=jnp.zeros(n, dtype),
+        Tu=jnp.zeros(n, dtype),
+        m=jnp.zeros(n, jnp.int32),
+        e_beta=jnp.zeros(n, dtype),
+        tti_backoff=jnp.ones(n, dtype),
+    )
+
+
+def on_computed(
+    state: CCPState,
+    cfg: CCPConfig,
+    tx_i: jnp.ndarray,
+    tr_i: jnp.ndarray,
+    tr_prev: jnp.ndarray,
+    rtt_ack: jnp.ndarray,
+    active: jnp.ndarray,
+) -> Tuple[CCPState, jnp.ndarray]:
+    """Process the computed-packet receipt for one packet per helper.
+
+    All args are (N,) arrays; ``active`` masks helpers whose update applies.
+    ``tr_prev`` is Tr_{n,i-1} (ignored for the first packet). Returns the new
+    state and TTI_{n,i} per eq. (8).
+    """
+    first = state.m == 0
+    rtt_sample = cfg.data_scale * rtt_ack
+    rtt_new = jnp.where(
+        first, rtt_sample, cfg.alpha * rtt_sample + (1.0 - cfg.alpha) * state.rtt_data
+    )
+    # eq. (2)/(7): XTT_i = Tr_{i-1} - Tx_i ; Tu += max(0, RTT - XTT)
+    xtt = tr_prev - tx_i
+    tu_inc = jnp.maximum(0.0, rtt_new - xtt)
+    tu_new = jnp.where(first, cfg.fwd_frac * rtt_ack, state.Tu + tu_inc)
+    m_new = state.m + 1
+    # eq. (6): helper-side finish-time estimate.
+    tc = tr_i - cfg.back_frac * rtt_new
+    # eq. (5).
+    e_beta = jnp.maximum((tc - tu_new) / m_new.astype(tc.dtype), 1e-9)
+    # Successful receipt resets the timeout backoff (ACK arrived in time).
+    new_state = CCPState(
+        rtt_data=jnp.where(active, rtt_new, state.rtt_data),
+        Tu=jnp.where(active, tu_new, state.Tu),
+        m=jnp.where(active, m_new, state.m),
+        e_beta=jnp.where(active, e_beta, state.e_beta),
+        tti_backoff=jnp.where(active, 1.0, state.tti_backoff),
+    )
+    tti_i = jnp.minimum(tr_i - tx_i, e_beta) * new_state.tti_backoff
+    return new_state, tti_i
+
+
+def on_timeout(state: CCPState, active: jnp.ndarray) -> CCPState:
+    """Alg. 1 line 13: double the effective TTI of unresponsive helpers."""
+    return state.replace(
+        tti_backoff=jnp.where(active, state.tti_backoff * 2.0, state.tti_backoff)
+    )
+
+
+def tti(state: CCPState, tr_minus_tx: jnp.ndarray) -> jnp.ndarray:
+    """eq. (8) with the current estimate and the last observed Tr - Tx."""
+    return jnp.minimum(tr_minus_tx, state.e_beta) * state.tti_backoff
+
+
+def timeout_deadline(state: CCPState, tti_cur: jnp.ndarray) -> jnp.ndarray:
+    """Alg. 1 line 14: TO = 2 * (TTI + RTT^data)."""
+    return 2.0 * (tti_cur + state.rtt_data)

@@ -1,0 +1,108 @@
+"""CCP-driven runtime scheduler: the paper's estimator over device telemetry.
+
+On a real cluster the "helpers" are hosts/pods and the radio ACKs become
+step-completion timestamps; the estimator arithmetic (eqs. 3-8) is shared
+with the simulator via repro.core.ccp.  The scheduler:
+
+  * keeps per-worker E[beta] (time per unit work) estimates via eq. (5),
+  * reallocates microbatches between steps with the optimal allocation of
+    eq. (23) (integerized by largest remainder),
+  * applies timeout backoff (Alg. 1 l.13) and flags workers for the elastic
+    layer once the backoff crosses ``drop_after`` doublings — the paper's
+    "offload less and less to an unresponsive helper" taken to its limit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ccp as ccp_mod
+from . import theory
+
+__all__ = ["CCPScheduler"]
+
+
+@dataclasses.dataclass
+class CCPScheduler:
+    n_workers: int
+    alpha: float = 0.25
+    timeout_factor: float = 2.0
+    drop_after: int = 3          # backoff doublings before declaring dead
+    cfg: ccp_mod.CCPConfig = None
+    state: ccp_mod.CCPState = None
+    _clock: Optional[np.ndarray] = None  # per-worker busy-time virtual clock
+    _work: Optional[np.ndarray] = None   # last allocation (units per worker)
+
+    def __post_init__(self):
+        # Bx/Br/Back are vestigial here (telemetry has no packet sizes);
+        # Bx >> Br keeps the eq. (3)/(6) corrections negligible.
+        self.cfg = ccp_mod.CCPConfig(Bx=1e6, Br=8.0, Back=1.0, alpha=self.alpha)
+        self.state = ccp_mod.init_state(self.n_workers)
+        self._work = np.ones(self.n_workers)
+        self._clock = np.zeros(self.n_workers)
+
+    # -- telemetry ---------------------------------------------------------
+
+    def observe_step(self, durations: Sequence[float],
+                     rtts: Optional[Sequence[float]] = None) -> None:
+        """Feed one step's per-worker wall times (seconds).  ``durations[i]``
+        covers ``self._work[i]`` units of work; the estimator sees synthetic
+        (Tx, Tr) pairs on a virtual clock — per-unit estimates come out via
+        eq. (5)'s busy-time normalization."""
+        d = np.asarray(durations, dtype=np.float64)
+        units = np.maximum(self._work, 1)
+        per_unit = d / units
+        rtt = np.asarray(rtts if rtts is not None else np.full_like(d, 1e-4))
+        finite = np.isfinite(d)
+        pu = np.where(finite, per_unit, 0.0)
+        # Each worker lives on its own busy-time clock: one "packet" = one
+        # unit of work sent at tx=clock_n and returned at clock_n + per-unit
+        # time (+rtt), so eq. (5)'s busy-time normalization yields the
+        # per-unit cost estimate directly.
+        tx = jnp.asarray(self._clock)
+        tr = jnp.asarray(self._clock + pu + rtt)
+        tr_prev = jnp.asarray(self._clock)
+        active = jnp.asarray(finite)
+        self.state, _ = ccp_mod.on_computed(
+            self.state, self.cfg, tx, tr, tr_prev,
+            jnp.asarray(rtt), active,
+        )
+        timed_out = jnp.asarray(~finite)
+        if bool(timed_out.any()):
+            self.state = ccp_mod.on_timeout(self.state, timed_out)
+        self._clock = self._clock + pu
+
+    # -- decisions ---------------------------------------------------------
+
+    @property
+    def e_beta(self) -> np.ndarray:
+        e = np.asarray(self.state.e_beta, dtype=np.float64)
+        backoff = np.asarray(self.state.tti_backoff, dtype=np.float64)
+        e = np.where(e <= 0, np.nanmean(e[e > 0]) if (e > 0).any() else 1.0, e)
+        return e * backoff  # backoff inflates the effective cost (Alg.1 l.13)
+
+    def allocation(self, total_units: int) -> np.ndarray:
+        """eq. (23): units_n proportional to 1/E[beta_n]; integers summing to
+        total_units.  Dead workers get 0."""
+        e = self.e_beta
+        alive = ~self.dead_mask()
+        inv = np.where(alive, 1.0 / e, 0.0)
+        if inv.sum() == 0:
+            inv = np.ones(self.n_workers)
+        loads = total_units * inv / inv.sum()
+        out = theory.largest_remainder_round(loads, total_units)
+        self._work = np.maximum(out, 1)
+        return out
+
+    def dead_mask(self) -> np.ndarray:
+        return np.asarray(self.state.tti_backoff) >= 2.0 ** self.drop_after
+
+    def timeout_deadline(self) -> np.ndarray:
+        """Per-worker step deadline (Alg. 1 l.14): 2*(TTI + RTT)."""
+        e = self.e_beta * np.maximum(self._work, 1)
+        rtt = np.asarray(self.state.rtt_data)
+        return 2.0 * (e + rtt)

@@ -1,0 +1,297 @@
+"""Vectorized discrete-event simulation of CCP and the paper's baselines.
+
+Reproduces §6 of the paper: a collector offloads fountain-coded packets to
+``N`` heterogeneous helpers over lossless links with random per-packet rates;
+helper ``n`` computes packet ``i`` in ``beta_{n,i}`` (Scenario 1: i.i.d.
+shifted-exponential per packet; Scenario 2: one draw per helper).  The
+completion time is when the collector has received ``R+K`` computed packets.
+
+Instead of a global event queue (O(N*R) sequential events), we exploit that
+helpers only couple through the *stopping rule*: each helper's packet
+timeline is an independent recurrence, so we
+
+  1. scan each helper's timeline for ``M`` packets (vectorized over helpers,
+     ``lax.scan`` over the packet index),
+  2. merge the computed-packet arrival times ``Tr`` across helpers and take
+     the (R+K)-th order statistic as the completion time.
+
+The CCP send rule, eq. (8) ``TTI_i = min(Tr_i - Tx_i, E[beta])``, is *causal*
+when read operationally:  ``tx_{i+1} = min(Tr_i, tx_i + E[beta])`` — send the
+next packet either the moment the previous computed result returns (the
+helper finished early) or when ``E[beta]`` has elapsed since the last send
+(the cap), whichever happens first.  The ``E[beta]`` estimate in effect is
+the latest one whose computed packet had returned by ``tx_i`` (held in a
+small ring buffer).  Until the first computed packet returns the collector
+has no estimate and falls back to stop-and-wait — this reproduces the
+startup under-utilization the paper reports in §6 (Efficiency).
+
+Timing model per packet (helper n, packet i):
+  arrive_i = tx_i + d_up_i                      (uplink)
+  start_i  = max(arrive_i, done_{i-1})          (FIFO helper queue)
+  done_i   = start_i + beta_i
+  Tr_i     = done_i + d_down_i                  (result downlink)
+  RTTack_i = d_up_i + d_ack_i                   (receipt ACK, measured)
+  idle_i   = max(0, arrive_i - done_{i-1})      (helper under-utilization)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ccp as ccp_mod
+from . import theory
+
+__all__ = [
+    "ScenarioConfig",
+    "draw_helpers",
+    "draw_packet_tables",
+    "simulate_stream",
+    "completion_time",
+    "run_ccp",
+    "run_best",
+    "run_naive",
+    "RING",
+]
+
+RING = 16  # ring-buffer slots for in-flight (Tr, TTI) pairs
+
+
+# ---------------------------------------------------------------------------
+# Configuration and random draws
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Paper §6 simulation setup.
+
+    scenario: 1 (i.i.d. per-packet runtimes / Model I) or
+              2 (one runtime draw per helper / Model II).
+    a_mode:   'const' -> a_n = a_const;  'inv_mu' -> a_n = 1/mu_n.
+    mu_choices: helper speeds drawn uniformly from this set.
+    rate_lo/rate_hi: per-helper mean link rate bounds (bits/sec); per-packet
+      rates are Poisson with that mean (in Mbps), floored at 0.5 Mbps.
+    """
+
+    N: int = 100
+    scenario: int = 1
+    mu_choices: Tuple[float, ...] = (1.0, 2.0, 4.0)
+    a_mode: str = "const"
+    a_const: float = 0.5
+    rate_lo: float = 10e6
+    rate_hi: float = 20e6
+    overhead: float = 0.05  # K = ceil(overhead * R)
+    alpha: float = 0.25     # EWMA weight, eq. (4)
+
+    def K(self, R: int) -> int:
+        return int(np.ceil(self.overhead * R))
+
+    def ccp_cfg(self, R: int) -> ccp_mod.CCPConfig:
+        # Paper: Bx = 8R bits, Br = 8 bits, Back = 1 bit.
+        return ccp_mod.CCPConfig(Bx=8.0 * R, Br=8.0, Back=1.0, alpha=self.alpha)
+
+
+def draw_helpers(key, cfg: ScenarioConfig):
+    """Draw per-helper (mu_n, a_n, mean link rate)."""
+    k1, k2 = jax.random.split(key)
+    mu = jax.random.choice(k1, jnp.asarray(cfg.mu_choices), shape=(cfg.N,))
+    if cfg.a_mode == "const":
+        a = jnp.full((cfg.N,), cfg.a_const)
+    elif cfg.a_mode == "inv_mu":
+        a = 1.0 / mu
+    else:
+        raise ValueError(f"unknown a_mode {cfg.a_mode!r}")
+    rate = jax.random.uniform(k2, (cfg.N,), minval=cfg.rate_lo, maxval=cfg.rate_hi)
+    return mu, a, rate
+
+
+def draw_packet_tables(key, cfg: ScenarioConfig, mu, a, rate, M: int, R: int):
+    """Per-packet tables, each (N, M): beta, d_up, d_ack, d_down."""
+    kb, ku, kd = jax.random.split(key, 3)
+    N = cfg.N
+    if cfg.scenario == 1:
+        beta = a[:, None] + jax.random.exponential(kb, (N, M)) / mu[:, None]
+    elif cfg.scenario == 2:
+        b = a + jax.random.exponential(kb, (N,)) / mu
+        beta = jnp.broadcast_to(b[:, None], (N, M))
+    else:
+        raise ValueError(f"scenario must be 1 or 2, got {cfg.scenario}")
+    # Per-packet link rates: Poisson around the per-helper mean (in Mbps),
+    # floored to avoid div-by-zero on a zero draw.
+    lam = jnp.broadcast_to((rate / 1e6)[:, None], (N, M))
+    up = jnp.maximum(jax.random.poisson(ku, lam, (N, M)).astype(jnp.float32), 0.5) * 1e6
+    dn = jnp.maximum(jax.random.poisson(kd, lam, (N, M)).astype(jnp.float32), 0.5) * 1e6
+    c = cfg.ccp_cfg(R)
+    d_up = c.Bx / up
+    d_ack = c.Back / dn
+    d_down = c.Br / dn
+    return beta, d_up, d_ack, d_down
+
+
+# ---------------------------------------------------------------------------
+# The per-helper timeline scan
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("mode", "cfg_static"))
+def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static):
+    """Simulate M packets on every helper. Returns dict of (N, M) arrays.
+
+    mode: 'ccp'   — Algorithm 1 (estimated TTI, ring-buffer feedback delay)
+          'best'  — oracle TTI_{n,i} = beta_{n,i} (paper's Best, eq. 13)
+          'naive' — stop-and-wait: tx_{i+1} = Tr_i (paper's Naive, eq. 16)
+    cfg_static: hashable (Bx, Br, Back, alpha) tuple.
+    """
+    Bx, Br, Back, alpha = cfg_static
+    cfg = ccp_mod.CCPConfig(Bx=Bx, Br=Br, Back=Back, alpha=alpha)
+    N, M = beta.shape
+    state0 = ccp_mod.init_state(N)
+
+    carry0 = dict(
+        tx=jnp.zeros(N),              # send time of current packet (Tx_{n,1}=0)
+        done_prev=jnp.zeros(N),
+        tr_prev=jnp.zeros(N),
+        est=state0,
+        ring_tr=jnp.full((N, RING), jnp.inf),
+        ring_tti=jnp.zeros((N, RING)),
+    )
+    xs = dict(
+        beta=beta.T, d_up=d_up.T, d_ack=d_ack.T, d_down=d_down.T,
+        i=jnp.arange(M),
+    )
+
+    def step(carry, x):
+        tx = carry["tx"]
+        arrive = tx + x["d_up"]
+        start = jnp.maximum(arrive, carry["done_prev"])
+        done = start + x["beta"]
+        tr = done + x["d_down"]
+        idle = jnp.maximum(arrive - carry["done_prev"], 0.0)
+        rtt_ack = x["d_up"] + x["d_ack"]
+
+        if mode == "ccp":
+            est, _tti_i = ccp_mod.on_computed(
+                carry["est"], cfg, tx, tr, carry["tr_prev"], rtt_ack,
+                active=jnp.ones((N,), bool),
+            )
+            slot = x["i"] % RING
+            ring_tr = carry["ring_tr"].at[:, slot].set(tr)
+            ring_tti = carry["ring_tti"].at[:, slot].set(est.e_beta)
+            # E[beta] estimate in effect when planning the next send: the
+            # entry with the largest Tr among those with Tr <= tx (latest
+            # information that had arrived by the current send instant).
+            valid = ring_tr <= tx[:, None]
+            masked = jnp.where(valid, ring_tr, -jnp.inf)
+            sel = jnp.argmax(masked, axis=1)
+            has = valid.any(axis=1)
+            e_beta_sel = jnp.take_along_axis(ring_tti, sel[:, None], axis=1)[:, 0]
+            # eq. (8), causal form: tx_{i+1} = min(Tr_i, tx_i + E[beta]).
+            # Bootstrap: before any computed packet has returned by tx, the
+            # collector has no estimate -> stop-and-wait on this packet.
+            tx_next = jnp.where(has, jnp.minimum(tr, tx + e_beta_sel), tr)
+        elif mode == "best":
+            est = carry["est"]
+            ring_tr, ring_tti = carry["ring_tr"], carry["ring_tti"]
+            tx_next = tx + x["beta"]  # oracle: TTI_{n,i} = beta_{n,i}
+        elif mode == "naive":
+            est = carry["est"]
+            ring_tr, ring_tti = carry["ring_tr"], carry["ring_tti"]
+            tx_next = tr
+        else:
+            raise ValueError(mode)
+
+        new_carry = dict(
+            tx=tx_next, done_prev=done, tr_prev=tr, est=est,
+            ring_tr=ring_tr, ring_tti=ring_tti,
+        )
+        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive)
+        return new_carry, out
+
+    _, outs = jax.lax.scan(step, carry0, xs)
+    return {k: v.T for k, v in outs.items()}  # (N, M)
+
+
+# ---------------------------------------------------------------------------
+# Completion-time + efficiency extraction
+# ---------------------------------------------------------------------------
+
+def completion_time(tr: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Time when the k-th computed packet reaches the collector.
+
+    Returns (T, valid): ``valid`` is False if the per-helper horizon M was too
+    short to certify T (some helper might have contributed more packets by T
+    than were simulated) — caller should re-run with a larger M.
+    """
+    flat = jnp.sort(tr.reshape(-1))
+    t = flat[k - 1]
+    valid = t <= jnp.min(tr[:, -1])
+    return t, valid
+
+
+def efficiency_measured(tr, idle, beta, t_end) -> jnp.ndarray:
+    """Paper §6 'Efficiency': 1 - sum(idle)/sum(beta) over packets the helper
+    computed within the completion horizon. Returns (N,) per-helper values."""
+    within = tr <= t_end
+    idle_sum = (idle * within).sum(axis=1)
+    busy_sum = (beta * within).sum(axis=1)
+    return jnp.where(busy_sum > 0, 1.0 - idle_sum / (idle_sum + busy_sum), jnp.nan)
+
+
+# ---------------------------------------------------------------------------
+# Top-level runners (one Monte-Carlo rep each)
+# ---------------------------------------------------------------------------
+
+def _horizon(cfg: ScenarioConfig, mu, a, R: int) -> int:
+    """Packets to simulate per helper: ~3x the fastest helper's fair share."""
+    k = R + cfg.K(R)
+    w = 1.0 / theory.shifted_exp_mean(np.asarray(a), np.asarray(mu))
+    share = float(w.max() / w.sum())
+    m = int(np.ceil(3.0 * k * share)) + 64
+    # Bucket to limit jit recompiles across the R sweep.
+    bucket = 1 << int(np.ceil(np.log2(max(m, 64))))
+    return min(bucket, k)
+
+
+def _run_mode(key, cfg: ScenarioConfig, R: int, mode: str) -> Dict[str, np.ndarray]:
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = draw_helpers(k_h, cfg)
+    kk = R + cfg.K(R)
+    M = _horizon(cfg, mu, a, R)
+    for _ in range(6):  # grow horizon until the order statistic is certified
+        beta, d_up, d_ack, d_down = draw_packet_tables(k_p, cfg, mu, a, rate, M, R)
+        c = cfg.ccp_cfg(R)
+        outs = simulate_stream(
+            beta, d_up, d_ack, d_down, mode=mode,
+            cfg_static=(c.Bx, c.Br, c.Back, c.alpha),
+        )
+        t, valid = completion_time(outs["tr"], kk)
+        if bool(valid) or M >= kk:
+            break
+        M = min(M * 2, kk)
+    eff = efficiency_measured(outs["tr"], outs["idle"], beta, t)
+    r_n = (outs["tr"] <= t).sum(axis=1)
+    return dict(
+        T=float(t),
+        efficiency=np.asarray(eff),
+        r_n=np.asarray(r_n),
+        mu=np.asarray(mu),
+        a=np.asarray(a),
+        rate=np.asarray(rate),
+        M=M,
+    )
+
+
+def run_ccp(key, cfg: ScenarioConfig, R: int):
+    return _run_mode(key, cfg, R, "ccp")
+
+
+def run_best(key, cfg: ScenarioConfig, R: int):
+    return _run_mode(key, cfg, R, "best")
+
+
+def run_naive(key, cfg: ScenarioConfig, R: int):
+    return _run_mode(key, cfg, R, "naive")

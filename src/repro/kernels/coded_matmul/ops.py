@@ -1,0 +1,92 @@
+"""Jitted public wrapper for the fused coded matmul.
+
+Handles padding to block multiples, the jnp fallback (used on CPU and in the
+dry-run lowering), and LTCode plumbing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.fountain import LTCode
+from .kernel import coded_matmul_pallas
+from .ref import coded_matmul_ref
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(
+    __import__("jax").jit,
+    static_argnames=("bm", "bk", "bn", "use_pallas", "interpret"),
+)
+def coded_matmul(
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    bm: int,
+    bk: int = 256,
+    bn: int = 256,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """V[b*bm:(b+1)*bm] = (sum_j mask[b,j] A[idx[b,j]]) @ x for coded block b.
+
+    a: (R*bm, k_dim); x: (k_dim, n_dim); idx/mask: (C, d_max).
+    Returns (C*bm, n_dim).
+    """
+    if not use_pallas:
+        return coded_matmul_ref(a, x, idx, mask, bm)
+    k_dim, n_dim = x.shape
+    kp, np_ = _pad_to(k_dim, bk), _pad_to(n_dim, bn)
+    a_p = jnp.pad(a, ((0, 0), (0, kp - k_dim)))
+    x_p = jnp.pad(x, ((0, kp - k_dim), (0, np_ - n_dim)))
+    out = coded_matmul_pallas(
+        a_p, x_p, idx, mask, bm=bm, bk=bk, bn=bn, interpret=interpret
+    )
+    return out[:, :n_dim]
+
+
+def coded_matmul_code(
+    a: jnp.ndarray,
+    x: jnp.ndarray,
+    code: LTCode,
+    *,
+    bm: Optional[int] = None,
+    **kw,
+) -> jnp.ndarray:
+    """Convenience: drive the kernel from an LTCode. ``a`` rows must split
+    into ``code.R`` equal blocks (bm inferred when not given)."""
+    if bm is None:
+        if a.shape[0] % code.R:
+            raise ValueError(f"a rows {a.shape[0]} not divisible by R={code.R}")
+        bm = a.shape[0] // code.R
+    return coded_matmul(
+        a, x, jnp.asarray(code.idx), jnp.asarray(code.weights), bm=bm, **kw
+    )
+
+
+def flops(R: int, K: int, bm: int, k_dim: int, n_dim: int, d_mean: float) -> dict:
+    """Roofline terms for one fused coded matmul (per §Roofline).
+
+    Returns flops of the MXU matmul part, VPU encode adds, and HBM bytes
+    moved (bf16), for napkin math in benchmarks/kernel_bench.py.
+    """
+    C = R + K
+    matmul = 2.0 * C * bm * k_dim * n_dim
+    encode_adds = d_mean * C * bm * k_dim
+    bytes_fused = 2.0 * (d_mean * C * bm * k_dim + k_dim * n_dim + C * bm * n_dim)
+    bytes_unfused = bytes_fused + 2.0 * 2.0 * C * bm * k_dim  # write+read A_enc
+    return dict(
+        matmul_flops=matmul,
+        encode_flops=encode_adds,
+        hbm_bytes_fused=bytes_fused,
+        hbm_bytes_unfused=bytes_unfused,
+    )

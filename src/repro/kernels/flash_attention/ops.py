@@ -1,0 +1,111 @@
+"""Public attention op: Pallas kernel on TPU, jnp oracle elsewhere.
+
+Pads sequence lengths to block multiples (padding keys are masked via
+``tk_valid``; padded q rows are sliced off), picks block sizes that divide
+the padded shapes, and exposes the decode case (Tq=1 against a long KV
+cache) through the same interface.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_chunked, attention_ref
+
+# Above this key length the jnp fallback switches to the chunked
+# online-softmax path (O(T*chunk) memory instead of O(T^2)).
+CHUNKED_THRESHOLD = 2048
+
+# Module-level chunked-scan options (the dry-run sets unroll=True + a large
+# chunk so XLA cost analysis sees every chunk body; see launch/dryrun.py).
+CHUNK_OPTS = {"chunk": 1024, "unroll": False}
+
+
+def set_chunk_opts(chunk: int = 1024, unroll: bool = False) -> None:
+    CHUNK_OPTS["chunk"] = chunk
+    CHUNK_OPTS["unroll"] = unroll
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_block(t: int, pref: int) -> int:
+    if t >= pref:
+        return pref
+    # smallest power of two >= t (tiny test shapes)
+    b = 1
+    while b < t:
+        b *= 2
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "q_offset", "use_pallas", "interpret",
+        "bq", "bk",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    use_pallas: bool = False,
+    interpret: bool = False,
+    bq: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    """Attention over (B, H, T, D) tensors; see kernel.py for semantics."""
+    if not use_pallas:
+        if k.shape[2] > CHUNKED_THRESHOLD:
+            return attention_chunked(
+                q, k, v, causal=causal, window=window, softcap=softcap,
+                q_offset=q_offset, **CHUNK_OPTS,
+            )
+        return attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset,
+        )
+    B, Hq, Tq, D = q.shape
+    Tk = k.shape[2]
+    bq_eff = _pick_block(Tq, bq)
+    bk_eff = _pick_block(Tk, bk)
+    tq_p, tk_p = _pad_to(Tq, bq_eff), _pad_to(Tk, bk_eff)
+    q_p = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - Tq), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, 0), (0, tk_p - Tk), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, tk_p - Tk), (0, 0)))
+    out = flash_attention_pallas(
+        q_p, k_p, v_p,
+        causal=causal, window=window, softcap=softcap,
+        bq=bq_eff, bk=bk_eff, q_offset=q_offset, tk_valid=Tk,
+        interpret=interpret,
+    )
+    return out[:, :, :Tq]
+
+
+def attention_flops(
+    B: int, Hq: int, Tq: int, Tk: int, D: int,
+    causal: bool, window: Optional[int],
+) -> float:
+    """Useful FLOPs of one attention call (both matmuls), accounting for the
+    causal/window sparsity the kernel actually exploits."""
+    if window is not None:
+        pairs = sum(min(w + 1, q + 1 if causal else Tk)
+                    for q, w in ((i, window - 1) for i in range(Tq)))
+    elif causal:
+        off = Tk - Tq
+        pairs = sum(min(off + i + 1, Tk) for i in range(Tq))
+    else:
+        pairs = Tq * Tk
+    return 2.0 * 2.0 * B * Hq * pairs * D

@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for flash attention (causal / sliding-window / softcap /
+GQA): a quadratic-memory direct version (small shapes / ground truth) and a
+chunked online-softmax version with O(T * chunk) memory (what the CPU
+dry-run lowers for long sequences — materializing (T, T) scores at 32k-500k
+context would dominate memory_analysis and is exactly what the Pallas
+kernel avoids on TPU)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, Tq, D)
+    k: jnp.ndarray,  # (B, Hkv, Tk, D)
+    v: jnp.ndarray,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    kv_len: Optional[jnp.ndarray] = None,  # (B,) valid kv prefix lengths
+) -> jnp.ndarray:
+    """Reference attention in fp32. ``q_offset`` is the absolute position of
+    q[…, 0, :] (for decode: q_offset = kv_len - Tq). GQA: Hq % Hkv == 0.
+    ``window``: attend only to keys with q_pos - k_pos < window (and >= 0
+    when causal)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(Tq)[:, None]
+    k_pos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    mask = mask[None, None]
+    if kv_len is not None:
+        mask = mask & (k_pos[None, None] < kv_len[:, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, p / denom, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jnp.ndarray,  # (B, Hq, Tq, D)
+    k: jnp.ndarray,  # (B, Hkv, Tk, D)
+    v: jnp.ndarray,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset=0,
+    kv_len: Optional[jnp.ndarray] = None,
+    chunk: int = 1024,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Flash-style chunked attention in pure jnp: lax.scan over kv chunks
+    with a running (max, denom, acc) online softmax.  Same semantics as
+    :func:`attention_ref`; memory O(B*H*Tq*(D + chunk)).  ``q_offset`` and
+    ``kv_len`` may be traced (decode path).  ``unroll`` unrolls the chunk
+    scan (dry-run: XLA cost analysis counts rolled loop bodies once)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if Tk % chunk:
+        pad = chunk - Tk % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_len is None:
+            kv_len = jnp.full((B,), Tk, jnp.int32)
+        Tk = Tk + pad
+    n_chunks = Tk // chunk
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    q_pos = q_offset + jnp.arange(Tq)[:, None]                     # (Tq, 1)
+
+    # reshape k/v to (n_chunks, B, Hkv, chunk, D) for scan
+    kc = k.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = xs
+        kj = jnp.repeat(kj.astype(jnp.float32), group, axis=1)     # (B,Hq,c,D)
+        vj = jnp.repeat(vj.astype(jnp.float32), group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * chunk + jnp.arange(chunk)[None, :]             # (1, chunk)
+        mask = jnp.ones((Tq, chunk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        mask = mask[None, None]
+        if kv_len is not None:
+            mask = mask & (k_pos[None, None] < kv_len[:, None, None, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vj)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hq, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Tq), jnp.float32)
+    acc0 = jnp.zeros((B, Hq, Tq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks)), unroll=unroll
+    )
+    out = jnp.where(l[..., None] > 0, acc / l[..., None], 0.0)
+    return out.astype(q.dtype)

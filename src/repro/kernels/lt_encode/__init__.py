@@ -1,0 +1,2 @@
+from .kernel import lt_encode_pallas  # noqa: F401
+from .ops import lt_encode, lt_encode_code  # noqa: F401

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: standalone LT encode (gather + masked accumulate).
+
+Used where the *encoded object itself* is the output — e.g. building parity
+gradient blocks for coded gradient aggregation — rather than an input to a
+matmul (use kernels.coded_matmul for the fused case).
+
+Grid (C, col_tiles, d_max), j innermost; each step DMA's one source tile
+A[idx[b, j]] HBM->VMEM and adds it into an fp32 accumulator; the tile is
+written once per (b, c).  Pure VPU + DMA (no MXU): this kernel is memory
+bound by design, so tiles are sized large (bm x 512) to keep DMA efficiency
+high; VMEM working set = (2 + 4 + 2) B * bm * bc ~ 1 MB at (256, 512).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, mask_ref, a_ref, o_ref, acc, *, d_max):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    b = pl.program_id(0)
+    m = mask_ref[b, j].astype(jnp.float32)
+    acc[...] += a_ref[...].astype(jnp.float32) * m
+
+    @pl.when(j == d_max - 1)
+    def _write():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bc", "interpret"))
+def lt_encode_pallas(
+    a: jnp.ndarray,     # (R * bm, n_cols)
+    idx: jnp.ndarray,   # (C, d_max) int32
+    mask: jnp.ndarray,  # (C, d_max)
+    *,
+    bm: int,
+    bc: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n_cols = a.shape[1]
+    C, d_max = idx.shape
+    if a.shape[0] % bm or n_cols % bc:
+        raise ValueError(f"a {a.shape} not divisible by (bm={bm}, bc={bc})")
+    nc = n_cols // bc
+    grid = (C, nc, d_max)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (bm, bc), lambda b, c, j, idx_ref, mask_ref: (idx_ref[b, j], c)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (bm, bc), lambda b, c, j, idx_ref, mask_ref: (b, c)
+        ),
+        scratch_shapes=[pltpu.VMEM((bm, bc), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, d_max=d_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C * bm, n_cols), a.dtype),
+        interpret=interpret,
+        name="lt_encode",
+    )
+    return fn(idx.astype(jnp.int32), mask.astype(jnp.float32), a)

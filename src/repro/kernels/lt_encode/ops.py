@@ -1,0 +1,49 @@
+"""Jitted wrapper for the standalone LT-encode kernel (+ jnp fallback)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.fountain import LTCode
+from ..coded_matmul.ref import lt_encode_ref
+from .kernel import lt_encode_pallas
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bc", "use_pallas", "interpret"))
+def lt_encode(
+    a: jnp.ndarray,
+    idx: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    bm: int,
+    bc: int = 512,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """coded[b] = sum_j mask[b,j] * A[idx[b,j]] over bm-row blocks.
+
+    a: (R*bm, n_cols) -> (C*bm, n_cols).
+    """
+    if not use_pallas:
+        return lt_encode_ref(a, idx, mask, bm)
+    n_cols = a.shape[1]
+    cp = _pad_to(n_cols, bc)
+    a_p = jnp.pad(a, ((0, 0), (0, cp - n_cols)))
+    out = lt_encode_pallas(a_p, idx, mask, bm=bm, bc=bc, interpret=interpret)
+    return out[:, :n_cols]
+
+
+def lt_encode_code(a: jnp.ndarray, code: LTCode, *, bm: Optional[int] = None, **kw):
+    if bm is None:
+        if a.shape[0] % code.R:
+            raise ValueError(f"a rows {a.shape[0]} not divisible by R={code.R}")
+        bm = a.shape[0] // code.R
+    return lt_encode(a, jnp.asarray(code.idx), jnp.asarray(code.weights), bm=bm, **kw)

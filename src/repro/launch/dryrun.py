@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory/cost/collective analyses.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init).  512 host devices cover both the 16x16 single-pod and
+the 2x16x16 multi-pod mesh.
+
+Methodology.  XLA cost analysis counts a rolled while-body ONCE, and fully
+unrolling a 94-layer x 8-microbatch step does not compile in reasonable
+time on this container's single CPU core.  Each cell therefore gets:
+
+  1. the PRODUCTION lowering — rolled scans, full microbatch count, the
+     real shardings: the compile proof for the mesh, the memory_analysis
+     source, and the once-per-step (ENTRY-computation) collective wire;
+  2. two GROUP-DIFFERENCING cost probes — the same step lowered for
+     1-group and 2-group variants of the arch with layer/kv-chunk scans
+     unrolled (tiny HLO, seconds to compile).  One group's exact
+     fwd(+bwd+opt+grad-AR) cost is C2 - C1; totals assemble as
+
+       train: T = M*(L*G_micro + E_micro) + L*G_optAR + E_optAR
+       serve: T = C1 + (L-1)*(C2 - C1)
+
+     with the per-group optimizer/grad-all-reduce split computed
+     analytically from sharded param element counts (~15 flop / ~26 B per
+     element; ring AR wire = 2*S*(P-1)/P over the DP axes).
+
+Per-time-step scans (xlstm cells) stay rolled inside the probes — flagged
+``time_scan_undercount`` and corrected analytically in EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b \
+      --shape train_4k --mesh single                            # one cell
+Results are cached as JSON under experiments/dryrun/.
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config
+from repro.kernels.flash_attention.ops import set_chunk_opts
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_mod
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.runtime.train_loop import make_train_step
+from repro.utils import hlo as hlo_mod
+from repro.utils import roofline as rf
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+N_MICRO = {"default": 8}
+OPT_FLOPS_PER_ELEM = 15.0
+OPT_BYTES_PER_ELEM = 26.0
+
+
+def _mem_summary(compiled):
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _spec_div(sh, mesh) -> int:
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    div = 1
+    for ax in sh.spec:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            div *= names.get(a, 1)
+    return div
+
+
+def _sharded_elems(struct_tree, shard_tree, mesh) -> float:
+    total = 0.0
+    structs = jax.tree.leaves(struct_tree)
+    shards = jax.tree.leaves(shard_tree,
+                             is_leaf=lambda x: isinstance(x, NamedSharding))
+    for st, sh in zip(structs, shards):
+        n = float(np.prod(st.shape)) if st.shape else 1.0
+        total += n / _spec_div(sh, mesh)
+    return total
+
+
+def _sharded_bytes(struct_tree, shard_tree, mesh) -> float:
+    total = 0.0
+    structs = jax.tree.leaves(struct_tree)
+    shards = jax.tree.leaves(shard_tree,
+                             is_leaf=lambda x: isinstance(x, NamedSharding))
+    for st, sh in zip(structs, shards):
+        n = float(np.prod(st.shape)) if st.shape else 1.0
+        total += n * st.dtype.itemsize / _spec_div(sh, mesh)
+    return total
+
+
+def _wire(hlo_text, entry_only=False):
+    ops = hlo_mod.parse_collectives(hlo_text)
+    if entry_only:
+        ops = [o for o in ops if o.in_entry]
+    return rf.wire_bytes(ops)
+
+
+def _dp_size(mesh) -> int:
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return names.get("data", 1) * names.get("pod", 1)
+
+
+def _shrink(cfg, n_groups: int):
+    """Variant config with n_groups repeats of the block pattern (and, for
+    enc-dec, a matching encoder depth)."""
+    kw = dict(n_layers=n_groups * cfg.pattern_period)
+    if cfg.enc_dec:
+        kw["n_enc_layers"] = n_groups
+    return dataclasses.replace(cfg, **kw)
+
+
+def _probe_once(cfg_v, shape, mesh, rules, kind, micro_gb, opts=None):
+    """Lower one (small) variant and return its total flops/bytes/wire and
+    per-device param element count."""
+    opts = opts or {}
+    set_chunk_opts(chunk=4096, unroll=True)
+    model = build_model(cfg_v, use_pallas=False, remat=True, unroll_scans=True,
+                        remat_policy=opts.get("remat_policy", "full"),
+                        ring_local=bool(opts.get("ring_local")))
+    params_struct, axes = specs_mod.params_and_axes_struct(model)
+    p_shard = shd.param_shardings(mesh, axes, rules)
+    elems = _sharded_elems(params_struct, p_shard, mesh)
+    if kind == "train":
+        o_struct = specs_mod.opt_struct(params_struct)
+        o_shard = adamw.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=shd.opt_state_shardings(mesh, axes, rules,
+                                      specs_mod.shapes_of(params_struct)),
+            v=shd.opt_state_shardings(mesh, axes, rules,
+                                      specs_mod.shapes_of(params_struct)),
+        )
+        micro_shape = dataclasses.replace(shape, global_batch=micro_gb)
+        b_struct = specs_mod.batch_struct(cfg_v, micro_shape, 1)
+        b_shard = specs_mod.batch_shardings(mesh, b_struct)
+        step = make_train_step(model, adamw.AdamWConfig(), 1, pre_shaped=True,
+                               unroll=True)
+        fn = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None))
+        with mesh:
+            compiled = fn.lower(params_struct, o_struct, b_struct).compile()
+    else:
+        tok_struct, cache_struct, emb_struct = specs_mod.serve_structs(
+            model, cfg_v, shape)
+        tok_sh, cache_sh, emb_sh = specs_mod.serve_shardings(
+            mesh, cfg_v, shape, cache_struct, rules)
+        if kind == "prefill" and emb_struct is not None:
+            f = lambda p, t, c, e: model.prefill(p, t, c, embeds=e)
+            in_sh = (p_shard, tok_sh, cache_sh, emb_sh)
+            args = (params_struct, tok_struct, cache_struct, emb_struct)
+        elif kind == "prefill":
+            f = lambda p, t, c: model.prefill(p, t, c)
+            in_sh = (p_shard, tok_sh, cache_sh)
+            args = (params_struct, tok_struct, cache_struct)
+        else:
+            f = lambda p, t, c: model.decode_step(p, t, c)
+            in_sh = (p_shard, tok_sh, cache_sh)
+            args = (params_struct, tok_struct, cache_struct)
+        fn = jax.jit(f, in_shardings=in_sh, out_shardings=(None, cache_sh))
+        with mesh:
+            compiled = fn.lower(*args).compile()
+    cost = dict(compiled.cost_analysis() or {})
+    hlo_text = compiled.as_text()
+    return dict(
+        flops=float(cost.get("flops", 0.0)),
+        bytes=float(cost.get("bytes accessed", 0.0)),
+        wire=_wire(hlo_text),
+        elems=elems,
+    )
+
+
+def _assemble(cfg, shape, mesh, c1, c2, n_micro):
+    """Group-differencing assembly (see module docstring)."""
+    L = cfg.n_groups
+    dp = _dp_size(mesh)
+    d_elems = max(c2["elems"] - c1["elems"], 0.0)   # one group, per device
+    e_elems = max(c1["elems"] - d_elems, 0.0)       # embed/head/norms
+    out = {}
+    if shape.kind == "train":
+        ar = lambda elems: 2.0 * elems * 4.0 * (dp - 1) / dp if dp > 1 else 0.0
+        g_opt = {
+            "flops": OPT_FLOPS_PER_ELEM * d_elems,
+            "bytes": OPT_BYTES_PER_ELEM * d_elems,
+            "wire": ar(d_elems),
+        }
+        e_opt = {
+            "flops": OPT_FLOPS_PER_ELEM * e_elems,
+            "bytes": OPT_BYTES_PER_ELEM * e_elems,
+            "wire": ar(e_elems),
+        }
+        for k in ("flops", "bytes", "wire"):
+            g = max(c2[k] - c1[k], 0.0)
+            g_micro = max(g - g_opt[k], 0.0)
+            e_all = max(c1[k] - g, 0.0)
+            e_micro = max(e_all - e_opt[k], 0.0)
+            out[k] = (n_micro * (L * g_micro + e_micro)
+                      + L * g_opt[k] + e_opt[k])
+    else:
+        for k in ("flops", "bytes", "wire"):
+            g = max(c2[k] - c1[k], 0.0)
+            out[k] = c1[k] + (L - 1) * g
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             opts=None):
+    """opts: perf-iteration knob overrides, e.g. {"remat_policy": "dots",
+    "n_micro": 4} — used by the §Perf hillclimb (benchmarks/perf_iter.py)."""
+    opts = opts or {}
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, param_dtype="bfloat16", compute_dtype="bfloat16")
+    skip = applicable(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "skip", "skip_reason": skip,
+    }
+    if skip is not None:
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = shd.make_rules(cfg, mesh, opts)
+    mflops = rf.model_flops(cfg, shape, n_dev)
+
+    from repro.models.attention import set_attn_opts
+    from repro.models.moe import set_moe_opts
+
+    set_moe_opts(constrain=bool(opts.get("moe_constrain")),
+                 a2a_mesh=mesh if opts.get("moe_a2a") else None)
+    if opts.get("kv_gather"):
+        # batch stays data-sharded when divisible; k/v replicate over model
+        bspec = shd.batch_spec(mesh, shape.global_batch, extra_dims=0)[0]
+        set_attn_opts(kv_gather=bspec if bspec else ())
+    else:
+        set_attn_opts(kv_gather=None)
+
+    # ---- production lowering: compile proof + memory + entry collectives --
+    set_chunk_opts(chunk=1024, unroll=False)
+    model_prod = build_model(cfg, use_pallas=False, remat=True,
+                             unroll_scans=False,
+                             remat_policy=opts.get("remat_policy", "full"),
+                             ring_local=bool(opts.get("ring_local")))
+    params_struct, axes = specs_mod.params_and_axes_struct(model_prod)
+    p_shard = shd.param_shardings(mesh, axes, rules)
+
+    n_micro = 1
+    if shape.kind == "train":
+        n_micro = opts.get("n_micro") or N_MICRO.get(arch, N_MICRO["default"])
+        dp = _dp_size(mesh)
+        while (shape.global_batch // n_micro) % dp and n_micro > 1:
+            n_micro //= 2
+        o_struct = specs_mod.opt_struct(params_struct)
+        o_shard = adamw.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=shd.opt_state_shardings(mesh, axes, rules,
+                                      specs_mod.shapes_of(params_struct)),
+            v=shd.opt_state_shardings(mesh, axes, rules,
+                                      specs_mod.shapes_of(params_struct)),
+        )
+        b_struct = specs_mod.batch_struct(cfg, shape, n_micro)
+        b_shard = specs_mod.batch_shardings(mesh, b_struct)
+        step = make_train_step(model_prod, adamw.AdamWConfig(), n_micro,
+                               pre_shaped=True)
+        fn = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        with mesh:
+            compiled_prod = fn.lower(params_struct, o_struct, b_struct).compile()
+        cache_sh = cache_struct = None
+    else:
+        tok_struct, cache_struct, emb_struct = specs_mod.serve_structs(
+            model_prod, cfg, shape)
+        tok_sh, cache_sh, emb_sh = specs_mod.serve_shardings(
+            mesh, cfg, shape, cache_struct, rules)
+        if shape.kind == "prefill" and emb_struct is not None:
+            f = lambda p, t, c, e: model_prod.prefill(p, t, c, embeds=e)
+            in_sh = (p_shard, tok_sh, cache_sh, emb_sh)
+            args = (params_struct, tok_struct, cache_struct, emb_struct)
+        elif shape.kind == "prefill":
+            f = lambda p, t, c: model_prod.prefill(p, t, c)
+            in_sh = (p_shard, tok_sh, cache_sh)
+            args = (params_struct, tok_struct, cache_struct)
+        else:
+            f = lambda p, t, c: model_prod.decode_step(p, t, c)
+            in_sh = (p_shard, tok_sh, cache_sh)
+            args = (params_struct, tok_struct, cache_struct)
+        fn = jax.jit(f, in_shardings=in_sh, out_shardings=(None, cache_sh),
+                     donate_argnums=(len(args) - 1,) if shape.kind == "decode" else ())
+        with mesh:
+            compiled_prod = fn.lower(*args).compile()
+    mem = _mem_summary(compiled_prod) or {}
+    prod_hlo = compiled_prod.as_text()
+    once_wire = _wire(prod_hlo, entry_only=True)
+    colls = hlo_mod.collective_summary(prod_hlo)
+    t_prod = round(time.time() - t0, 1)
+
+    # ---- cost probes: 1-group and 2-group variants -------------------------
+    micro_gb = shape.global_batch // n_micro
+    c1 = _probe_once(_shrink(cfg, 1), shape, mesh, rules, shape.kind,
+                     micro_gb, opts)
+    c2 = _probe_once(_shrink(cfg, 2), shape, mesh, rules, shape.kind,
+                     micro_gb, opts)
+    tot = _assemble(cfg, shape, mesh, c1, c2, n_micro)
+
+    roof = rf.Roofline(
+        compute_s=tot["flops"] / rf.PEAK_FLOPS,
+        memory_s=tot["bytes"] / rf.HBM_BW,
+        collective_s=tot["wire"] / rf.ICI_BW,
+        hlo_flops=tot["flops"], hbm_bytes=tot["bytes"], wire_bytes=tot["wire"],
+        model_flops=mflops,
+    )
+
+    mem["param_bytes_per_device_est"] = _sharded_bytes(params_struct, p_shard, mesh)
+    if cache_struct is not None:
+        mem["cache_bytes_per_device_est"] = _sharded_bytes(
+            cache_struct, cache_sh, mesh)
+
+    has_time_scan = any(b in ("mlstm", "slstm") for b in cfg.block_pattern)
+    result.update(
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        compile_s_production=t_prod,
+        n_devices=n_dev,
+        n_micro=n_micro if shape.kind == "train" else None,
+        time_scan_undercount=bool(has_time_scan),
+        memory=mem,
+        collectives=colls,
+        once_wire=once_wire,
+        probe={"c1": c1, "c2": c2},
+        roofline=roof.to_dict(),
+        rules={k: v for k, v in rules.items()},
+    )
+    if verbose:
+        r = roof
+        print(
+            f"  ok in {result['compile_s']}s | flops/dev={r.hlo_flops:.3e} "
+            f"| hbm={r.hbm_bytes:.3e} | wire={r.wire_bytes:.3e} "
+            f"| dominant={r.dominant} | roofline_frac="
+            f"{None if r.roofline_fraction is None else round(r.roofline_fraction, 4)}",
+            flush=True,
+        )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    arches = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in arches:
+        for shape in shapes:
+            for mesh_name in meshes:
+                tag = f"{arch}__{shape}__{mesh_name}"
+                out = OUT_DIR / f"{tag}.json"
+                if out.exists() and not args.force:
+                    prev = json.loads(out.read_text())
+                    print(f"[cached] {tag}: {prev['status']}")
+                    n_ok += prev["status"] == "ok"
+                    n_skip += prev["status"] == "skip"
+                    n_fail += prev["status"] == "fail"
+                    continue
+                print(f"[run] {tag}", flush=True)
+                try:
+                    res = run_cell(arch, shape, mesh_name == "multi")
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "fail", "error": f"{type(e).__name__}: {e}",
+                    }
+                out.write_text(json.dumps(res, indent=1, default=str))
+                n_ok += res["status"] == "ok"
+                n_skip += res["status"] == "skip"
+                n_fail += res["status"] == "fail"
+                if res["status"] == "skip":
+                    print(f"  skip: {res['skip_reason']}")
+                elif res["status"] == "fail":
+                    print(f"  FAIL: {res['error']}")
+    print(f"\ndry-run complete: {n_ok} ok / {n_skip} skip / {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

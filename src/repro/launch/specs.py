@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct input builders + sharding trees for every (arch, shape).
+
+``input_specs`` returns stand-ins only — weak-type-correct, shardable, no
+device allocation — which is what ``jit(...).lower()`` consumes in the
+dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import Shape
+from ..models.config import ModelConfig
+from ..models.model import Model
+from ..optim import adamw
+from ..parallel import sharding as shd
+
+Struct = jax.ShapeDtypeStruct
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text-token length for a total sequence budget (vlm prefix eats into
+    the assigned seq_len)."""
+    if cfg.frontend == "vision_stub":
+        return max(seq_len - cfg.n_patches, 1)
+    return seq_len
+
+
+def batch_struct(cfg: ModelConfig, shape: Shape, n_micro: int) -> Dict[str, Struct]:
+    gb = shape.global_batch
+    t = text_len(cfg, shape.seq_len)
+    mb = gb // n_micro
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = {
+        "tokens": Struct((n_micro, mb, t), jnp.int32),
+        "labels": Struct((n_micro, mb, t), jnp.int32),
+    }
+    if cfg.frontend == "audio_stub":
+        out["embeds"] = Struct((n_micro, mb, cfg.enc_frames, cfg.d_model), cdt)
+    elif cfg.frontend == "vision_stub":
+        out["embeds"] = Struct((n_micro, mb, cfg.n_patches, cfg.d_model), cdt)
+    return out
+
+
+def batch_shardings(mesh: Mesh, batch: Dict[str, Struct]) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch.items():
+        gb = v.shape[1]
+        spec = shd.batch_spec(mesh, gb, extra_dims=v.ndim - 2)
+        out[k] = NamedSharding(mesh, P(None, *spec))
+    return out
+
+
+def params_and_axes_struct(model: Model, seed: int = 0):
+    """Shape-only params via eval_shape; the (static) axes tree is captured
+    as a tracing side effect — no allocation happens for full-size configs."""
+    captured = {}
+
+    def init_vals(k):
+        vals, axes = model.init(k)
+        captured["axes"] = axes
+        return vals
+
+    struct = jax.eval_shape(init_vals, jax.random.PRNGKey(seed))
+    return struct, captured["axes"]
+
+
+def opt_struct(params_struct):
+    return jax.eval_shape(adamw.init, params_struct)
+
+
+def shapes_of(tree):
+    return jax.tree.map(lambda x: x.shape, tree)
+
+
+def serve_structs(model: Model, cfg: ModelConfig, shape: Shape):
+    """(tokens, cache) structs for prefill/decode lowering."""
+    b = shape.global_batch
+    cdt = jnp.dtype(cfg.compute_dtype)
+    max_len = shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, max_len, cdt))
+    if shape.kind == "prefill":
+        tokens = Struct((b, text_len(cfg, shape.seq_len)), jnp.int32)
+    else:
+        tokens = Struct((b, 1), jnp.int32)
+    embeds = None
+    if cfg.frontend == "audio_stub":
+        embeds = Struct((b, cfg.enc_frames, cfg.d_model), cdt)
+    elif cfg.frontend == "vision_stub" and shape.kind == "prefill":
+        embeds = Struct((b, cfg.n_patches, cfg.d_model), cdt)
+    return tokens, cache, embeds
+
+
+def serve_shardings(mesh: Mesh, cfg: ModelConfig, shape: Shape, cache_struct,
+                    rules) -> Tuple[Any, Any, Any]:
+    b = shape.global_batch
+    tok = NamedSharding(mesh, shd.batch_spec(mesh, b, extra_dims=1))
+    cache = shd.cache_shardings(mesh, cfg, cache_struct, b, rules)
+    emb = NamedSharding(mesh, shd.batch_spec(mesh, b, extra_dims=2))
+    return tok, cache, emb

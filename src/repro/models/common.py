@@ -1,0 +1,160 @@
+"""Model substrate: param system with logical sharding axes, norms, RoPE.
+
+Params are nested dicts of ``jnp`` arrays.  Every initializer also produces a
+*matching* pytree of logical-axis tuples (e.g. ``("embed", "heads",
+"head_dim")``) built by the same code path, so the distribution layer
+(`repro.parallel.sharding`) can map logical axes -> mesh axes without any
+name registry drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Param construction: values + logical axes built together
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParamBuilder:
+    """Accumulates (value, axes) leaf pairs under one RNG stream."""
+
+    key: jax.Array
+    param_dtype: Any = jnp.float32
+
+    def _next(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, axes, stddev=0.02):
+        v = jax.random.normal(self._next(), shape, jnp.float32) * stddev
+        return v.astype(self.param_dtype), axes
+
+    def fan_in(self, shape, axes, fan_axis=0):
+        fan = shape[fan_axis] if isinstance(fan_axis, int) else 1
+        if not isinstance(fan_axis, int):
+            fan = 1
+            for ax in fan_axis:
+                fan *= shape[ax]
+        std = fan ** -0.5
+        v = jax.random.normal(self._next(), shape, jnp.float32) * std
+        return v.astype(self.param_dtype), axes
+
+    def zeros(self, shape, axes):
+        return jnp.zeros(shape, self.param_dtype), axes
+
+    def ones(self, shape, axes):
+        return jnp.ones(shape, self.param_dtype), axes
+
+    def const(self, value, axes):
+        return jnp.asarray(value, self.param_dtype), axes
+
+
+def unzip_params(tree: PyTree) -> Tuple[PyTree, PyTree]:
+    """Split a tree of (value, axes) leaf pairs into (values, axes) trees."""
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and (
+        isinstance(x[0], (jnp.ndarray, jax.Array))
+    )
+    values = jax.tree.map(lambda x: x[0], tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda x: x[1], tree, is_leaf=is_leaf)
+    return values, axes
+
+
+def stack_layer_params(per_layer: list) -> PyTree:
+    """Stack a list of identical param trees along a new leading 'layers'
+    axis (for lax.scan over layers)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def stack_layer_axes(axes_tree: PyTree) -> PyTree:
+    """Prepend the 'layers' logical axis to every leaf's axes tuple."""
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             scale_plus_one: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if scale_plus_one:  # gemma-style (1 + w)
+        s = 1.0 + s
+    return (y * s).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: Optional[jnp.ndarray],
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, H, T, D) with D even; positions: (B, T) or (T,) absolute."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,T,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(t: int, d: int, max_ts: float = 10000.0) -> jnp.ndarray:
+    """Classic sin/cos table (whisper encoder): (t, d)."""
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(max_ts) * jnp.arange(0, d, 2, jnp.float32) / d)
+    pe = jnp.zeros((t, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

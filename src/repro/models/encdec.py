@@ -1,0 +1,156 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Encoder: bidirectional attention over precomputed frame embeddings
+(``input_specs`` supplies (B, 1500, D) — the conv frontend is a stub per the
+assignment), sinusoidal positions, LayerNorm + GELU MLP + biases.
+Decoder: causal self-attention (+ KV cache) and cross-attention whose K/V
+are computed once from the encoder output and cached for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from .common import ParamBuilder, sinusoidal_positions, stack_layer_axes, stack_layer_params, unzip_params
+from .config import ModelConfig
+from .transformer import _init_norm, _norm
+
+
+def _init_enc_block(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "norm1": _init_norm(pb, cfg),
+        "attn": attn_mod.init_attention(pb, cfg),
+        "norm2": _init_norm(pb, cfg),
+        "mlp": mlp_mod.init_mlp(pb, cfg),
+    }
+
+
+def _init_dec_block(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "norm1": _init_norm(pb, cfg),
+        "self_attn": attn_mod.init_attention(pb, cfg),
+        "norm_x": _init_norm(pb, cfg),
+        "cross_attn": attn_mod.init_cross_attention(pb, cfg),
+        "norm2": _init_norm(pb, cfg),
+        "mlp": mlp_mod.init_mlp(pb, cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    pb = ParamBuilder(key=key, param_dtype=jnp.dtype(cfg.param_dtype))
+    top: Dict[str, Any] = {
+        "embed": pb.normal((cfg.vocab, cfg.d_model), ("vocab", "embed"), stddev=0.02),
+        "enc_final_norm": _init_norm(pb, cfg),
+        "final_norm": _init_norm(pb, cfg),
+    }
+    enc = [unzip_params(_init_enc_block(pb, cfg))[0] for _ in range(cfg.n_enc_layers)]
+    enc_axes = unzip_params(_init_enc_block(pb, cfg))[1]
+    dec = [unzip_params(_init_dec_block(pb, cfg))[0] for _ in range(cfg.n_layers)]
+    dec_axes = unzip_params(_init_dec_block(pb, cfg))[1]
+    values, axes = unzip_params(top)
+    values["encoder"] = stack_layer_params(enc)
+    axes["encoder"] = stack_layer_axes(enc_axes)
+    values["decoder"] = stack_layer_params(dec)
+    axes["decoder"] = stack_layer_axes(dec_axes)
+    return values, axes
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig, *,
+           use_pallas=False, interpret=False, unroll=False) -> jnp.ndarray:
+    """frames: (B, T_enc, D) stub embeddings -> encoder states."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(cdt)
+
+    def layer(x, p):
+        h = _norm(cfg, p["norm1"], x)
+        y, _ = attn_mod.attention(
+            p["attn"], h, cfg, causal=False, use_rope=False,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        x = x + y
+        h = _norm(cfg, p["norm2"], x)
+        return x + mlp_mod.mlp(p["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(layer, x, params["encoder"], unroll=unroll)
+    return _norm(cfg, params["enc_final_norm"], x)
+
+
+def decode(
+    params, tokens: jnp.ndarray, enc_out: jnp.ndarray, cfg: ModelConfig,
+    caches: Optional[Dict[str, Any]] = None, *,
+    use_pallas=False, interpret=False, unroll=False, last_only=False,
+    cross_kv: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """``cross_kv``: {"k","v"} (L, B, Hkv, T_enc, hd) — per-layer cross-attn
+    projections of the encoder output, computed once at prefill.  Without it
+    every decode step re-projects the 1500-frame encoder states through
+    every layer's wk/wv (the dominant decode waste for enc-dec models)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+
+    def layer(carry, xs):
+        x = carry
+        if cross_kv is not None:
+            p, c, ckv = xs
+        else:
+            p, c = xs
+            ckv = None
+        h = _norm(cfg, p["norm1"], x)
+        y, c_new = attn_mod.attention(
+            p["self_attn"], h, cfg, cache=c,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        x = x + y
+        h = _norm(cfg, p["norm_x"], x)
+        x = x + attn_mod.cross_attention(
+            p["cross_attn"], h, enc_out, cfg,
+            use_pallas=use_pallas, interpret=interpret, kv=ckv,
+        )
+        h = _norm(cfg, p["norm2"], x)
+        x = x + mlp_mod.mlp(p["mlp"], h, cfg)
+        return x, c_new
+
+    if caches is None:
+        x, _ = jax.lax.scan(
+            lambda c, p: (layer(c, (p, None))[0], None), x, params["decoder"],
+            unroll=unroll,
+        )
+        new_caches = None
+    else:
+        xs = ((params["decoder"], caches, cross_kv) if cross_kv is not None
+              else (params["decoder"], caches))
+        x, new_caches = jax.lax.scan(layer, x, xs, unroll=unroll)
+    x = _norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]  # prefill fast path: head on the final position only
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))
+    return logits.astype(jnp.float32), new_caches
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    c = attn_mod.init_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), c
+    )
+
+
+def compute_cross_kv(params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    """Per-layer cross-attn K/V of the encoder output: (L, B, Hkv, T_enc, hd)."""
+
+    def one(_, p):
+        k = jnp.einsum("btd,dhk->bhtk", enc_out,
+                       p["cross_attn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dhk->bhtk", enc_out,
+                       p["cross_attn"]["wv"].astype(enc_out.dtype))
+        if "bk" in p["cross_attn"]:
+            k = k + p["cross_attn"]["bk"].astype(k.dtype)[None, :, None, :]
+            v = v + p["cross_attn"]["bv"].astype(v.dtype)[None, :, None, :]
+        return None, {"k": k, "v": v}
+
+    _, kv = jax.lax.scan(one, None, params["decoder"])
+    return kv

@@ -1,0 +1,34 @@
+"""Dense MLP blocks: SwiGLU / GeGLU / plain GELU."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from .common import ACT, ParamBuilder
+from .config import ModelConfig
+
+
+def init_mlp(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": pb.fan_in((d, f), ("embed", "ff"), fan_axis=0),
+            "w_up": pb.fan_in((d, f), ("embed", "ff"), fan_axis=0),
+            "w_down": pb.fan_in((f, d), ("ff", "embed"), fan_axis=0),
+        }
+    return {
+        "w_up": pb.fan_in((d, f), ("embed", "ff"), fan_axis=0),
+        "w_down": pb.fan_in((f, d), ("ff", "embed"), fan_axis=0),
+    }
+
+
+def mlp(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = ACT["silu" if cfg.mlp == "swiglu" else "gelu"]
+        g = act(x @ params["w_gate"].astype(x.dtype))
+        u = x @ params["w_up"].astype(x.dtype)
+        return (g * u) @ params["w_down"].astype(x.dtype)
+    h = ACT["gelu"](x @ params["w_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype)

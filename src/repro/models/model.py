@@ -1,0 +1,147 @@
+"""Public model API: build_model(cfg) -> Model with init/loss/prefill/decode."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as encdec_mod
+from . import transformer as tf_mod
+from .config import ModelConfig
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token CE in fp32. logits (B,T,V) fp32, labels (B,T) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+@dataclasses.dataclass
+class Model:
+    """Bundle of pure functions for one architecture."""
+
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Tuple[Any, Any]]          # key -> (params, axes)
+    loss_fn: Callable[..., jnp.ndarray]                   # (params, batch) -> loss
+    forward: Callable[..., jnp.ndarray]                   # logits
+    prefill: Callable[..., Tuple[jnp.ndarray, Any]]
+    decode_step: Callable[..., Tuple[jnp.ndarray, Any]]
+    init_cache: Callable[..., Any]                        # (batch, max_len) -> cache
+
+
+def build_model(cfg: ModelConfig, *, use_pallas: bool = False,
+                interpret: bool = False, remat: bool = False,
+                unroll_scans: bool = False, remat_policy: str = "full",
+                ring_local: bool = False) -> Model:
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    if cfg.enc_dec:
+        return _build_encdec(cfg, use_pallas, interpret, unroll_scans)
+
+    def init(key):
+        return tf_mod.init_lm(key, cfg)
+
+    def forward(params, tokens, embeds=None):
+        logits, _, _ = tf_mod.lm_forward(
+            params, tokens, cfg, embeds=embeds,
+            use_pallas=use_pallas, interpret=interpret, unroll=unroll_scans,
+        )
+        return logits
+
+    def loss_fn(params, batch):
+        """batch: {"tokens": (B,T), "labels": (B,T), optional "embeds"}."""
+        logits, _, aux = tf_mod.lm_forward(
+            params, batch["tokens"], cfg, embeds=batch.get("embeds"),
+            use_pallas=use_pallas, interpret=interpret, remat=remat,
+            unroll=unroll_scans, remat_policy=remat_policy,
+        )
+        labels = batch["labels"]
+        if batch.get("embeds") is not None:
+            # loss only over the token suffix (stub prefix carries no labels)
+            logits = logits[:, -labels.shape[1]:]
+        return cross_entropy(logits, labels) + 0.01 * aux
+
+    def prefill(params, tokens, cache, embeds=None):
+        logits, cache, _ = tf_mod.lm_forward(
+            params, tokens, cfg, embeds=embeds, caches=cache,
+            use_pallas=use_pallas, interpret=interpret, unroll=unroll_scans,
+            last_only=True,
+        )
+        return logits[:, -1], cache
+
+    def decode_step(params, tokens, cache):
+        """tokens: (B, 1) -> (logits (B, V), cache')."""
+        logits, cache, _ = tf_mod.lm_forward(
+            params, tokens, cfg, caches=cache,
+            use_pallas=use_pallas, interpret=interpret, unroll=unroll_scans,
+        )
+        return logits[:, -1], cache
+
+    def init_cache(batch, max_len, dtype=None):
+        return tf_mod.init_lm_caches(cfg, batch, max_len, dtype or cdt,
+                                     ring_local=ring_local)
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, init_cache)
+
+
+def _build_encdec(cfg: ModelConfig, use_pallas: bool, interpret: bool,
+                  unroll_scans: bool = False) -> Model:
+    def init(key):
+        return encdec_mod.init_encdec(key, cfg)
+
+    def forward(params, tokens, embeds=None):
+        enc = encdec_mod.encode(
+            params, embeds, cfg, use_pallas=use_pallas, interpret=interpret,
+            unroll=unroll_scans,
+        )
+        logits, _ = encdec_mod.decode(
+            params, tokens, enc, cfg, use_pallas=use_pallas,
+            interpret=interpret, unroll=unroll_scans,
+        )
+        return logits
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch["tokens"], batch["embeds"])
+        return cross_entropy(logits, batch["labels"])
+
+    def prefill(params, tokens, cache, embeds=None):
+        enc = encdec_mod.encode(
+            params, embeds, cfg, use_pallas=use_pallas, interpret=interpret,
+            unroll=unroll_scans,
+        )
+        # project the encoder output through every layer's cross-attn K/V
+        # ONCE — decode steps reuse it (the enc-dec decode hot-spot fix)
+        cross = encdec_mod.compute_cross_kv(params, enc, cfg)
+        cache = dict(cache, cross_kv=cross)
+        logits, dec_c = encdec_mod.decode(
+            params, tokens, enc, cfg, cache["dec"],
+            use_pallas=use_pallas, interpret=interpret, unroll=unroll_scans,
+            last_only=True, cross_kv=cross,
+        )
+        cache = dict(cache, dec=dec_c)
+        return logits[:, -1], cache
+
+    def decode_step(params, tokens, cache):
+        logits, dec_c = encdec_mod.decode(
+            params, tokens, None, cfg, cache["dec"],
+            use_pallas=use_pallas, interpret=interpret, unroll=unroll_scans,
+            cross_kv=cache["cross_kv"],
+        )
+        return logits[:, -1], dict(cache, dec=dec_c)
+
+    def init_cache(batch, max_len, dtype=None):
+        cdt = dtype or jnp.dtype(cfg.compute_dtype)
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        return {
+            "dec": encdec_mod.init_dec_caches(cfg, batch, max_len, cdt),
+            "cross_kv": {
+                "k": jnp.zeros((cfg.n_layers, batch, hkv, cfg.enc_frames, hd), cdt),
+                "v": jnp.zeros((cfg.n_layers, batch, hkv, cfg.enc_frames, hd), cdt),
+            },
+        }
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, init_cache)

@@ -1,0 +1,136 @@
+"""Explicit shard_map MoE: the fix for the dispatch-collective blowup.
+
+GSPMD realizes the gather-based token dispatch of ``moe.moe_block`` as fp32
+full-(E, C, D)-buffer all-reduces over the data axis (~20 GB/layer/micro on
+qwen3 — §Perf cell A). The structure the partitioner misses: within one
+data shard, activations are *replicated over the model axis*, so device
+(d, m) already holds every token its local experts E_m need. The explicit
+formulation per device is therefore
+
+  1. all-gather the FSDP (ff->data) slices of the *local* experts' weights
+     over 'data'    (~0.9 GB/group on qwen3 — unavoidable under FSDP),
+  2. dispatch local tokens to local experts (sort/capacity — no comms),
+  3. full-ff expert FFN,
+  4. scatter-add back to token positions,
+  5. psum over 'model' (each token's top-k experts live across model
+     shards): (S_loc, D) bf16 ~ 67 MB.
+
+Net wire ~1 GB/group/micro vs ~20 GB for the GSPMD path (~20x).
+Capacity semantics differ slightly from the global version: the capacity
+bound applies per data shard (standard practice in EP systems).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ACT
+from .config import ModelConfig
+
+
+def moe_block_a2a(
+    params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, mesh,
+    data_axis: str = "data", model_axis: str = "model",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in for moe.moe_block over a ('data','model') mesh."""
+    m = cfg.moe
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = names.get(model_axis, 1)
+    data_n = names.get(data_axis, 1)
+    assert m.n_experts % model_n == 0, (m.n_experts, model_n)
+    e_loc = m.n_experts // model_n
+
+    def shard_fn(router, wg, wu, wd, sg, su, sd, x_loc):
+        # x_loc: (B_loc, T, D); wg/wu: (E_loc, D, F_loc); wd: (E_loc, F_loc, D)
+        B_loc, T, D = x_loc.shape
+        S = B_loc * T
+        xf = x_loc.reshape(S, D)
+        logits = (xf @ router.astype(x_loc.dtype)).astype(jnp.float32)
+        if m.router_softcap:
+            logits = m.router_softcap * jnp.tanh(logits / m.router_softcap)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, m.top_k)
+        top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+        # FSDP re-assembly of this model-shard's experts (tiled over data)
+        if data_n > 1:
+            wg_f = jax.lax.all_gather(wg, data_axis, axis=2, tiled=True)
+            wu_f = jax.lax.all_gather(wu, data_axis, axis=2, tiled=True)
+            wd_f = jax.lax.all_gather(wd, data_axis, axis=1, tiled=True)
+        else:
+            wg_f, wu_f, wd_f = wg, wu, wd
+
+        # local-expert dispatch (experts [me*e_loc, (me+1)*e_loc))
+        me = jax.lax.axis_index(model_axis)
+        e_start = me * e_loc
+        flat_e = top_e.reshape(-1)
+        flat_w = top_w.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(S), m.top_k)
+        local = (flat_e >= e_start) & (flat_e < e_start + e_loc)
+        rel_e = jnp.where(local, flat_e - e_start, e_loc)  # e_loc = drop bin
+        C = max(int(S * m.top_k * m.capacity_factor / m.n_experts) + 1, m.top_k)
+        order = jnp.argsort(rel_e, stable=True)
+        sorted_e = rel_e[order]
+        sorted_tok = flat_tok[order]
+        sorted_w = jnp.where(local[order], flat_w[order], 0.0)
+        counts = jnp.bincount(rel_e, length=e_loc + 1)[:e_loc]
+        offsets = jnp.concatenate(
+            [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+        slot_idx = offsets[:, None] + jnp.arange(C)[None, :]
+        slot_valid = jnp.arange(C)[None, :] < counts[:, None]
+        slot_idx = jnp.clip(slot_idx, 0, S * m.top_k - 1)
+        tok_at_slot = jnp.where(slot_valid, sorted_tok[slot_idx], 0)
+        w_at_slot = jnp.where(slot_valid, sorted_w[slot_idx], 0.0)
+
+        xd = xf[tok_at_slot] * slot_valid[..., None].astype(xf.dtype)
+        act = ACT["silu"]
+        g = act(jnp.einsum("ecd,edf->ecf", xd, wg_f.astype(xd.dtype)))
+        u = jnp.einsum("ecd,edf->ecf", xd, wu_f.astype(xd.dtype))
+        y = jnp.einsum("ecf,efd->ecd", g * u, wd_f.astype(xd.dtype))
+        y = y * w_at_slot[..., None].astype(y.dtype)
+        out = jax.ops.segment_sum(
+            y.reshape(-1, D), tok_at_slot.reshape(-1), num_segments=S
+        ).astype(x_loc.dtype)
+        # combine across model shards (each token's experts are spread)
+        out = jax.lax.psum(out, model_axis)
+
+        if m.n_shared:
+            gs = act(xf @ sg.astype(x_loc.dtype))
+            us = xf @ su.astype(x_loc.dtype)
+            out = out + (gs * us) @ sd.astype(x_loc.dtype)
+
+        # load-balance stats are global: average across data shards
+        mean_probs = jax.lax.pmean(probs.mean(axis=0), data_axis)
+        frac = jax.lax.pmean(
+            jnp.bincount(flat_e, length=m.n_experts) / (S * m.top_k), data_axis
+        )
+        aux = m.n_experts * jnp.sum(mean_probs * frac)
+        return out.reshape(B_loc, T, D), aux[None]
+
+    from jax.experimental.shard_map import shard_map
+
+    zero = jnp.zeros((1, 1), x.dtype)
+    sg = params.get("shared_gate", zero)
+    su = params.get("shared_up", zero)
+    sd = params.get("shared_down", zero)
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(
+            P(),                                # router replicated
+            P(model_axis, None, data_axis),     # wg (E, D, F)
+            P(model_axis, None, data_axis),     # wu
+            P(model_axis, data_axis, None),     # wd (E, F, D)
+            P(), P(), P(),                      # shared experts replicated
+            P(data_axis, None, None),           # x (B, T, D)
+        ),
+        out_specs=(P(data_axis, None, None), P()),
+        check_rep=False,
+    )
+    out, aux = fn(params["router"], params["w_gate"], params["w_up"],
+                  params["w_down"], sg, su, sd, x)
+    return out, aux.sum().astype(jnp.float32)

@@ -1,0 +1,117 @@
+"""RecurrentGemma / Griffin recurrent block: causal conv + RG-LRU.
+
+RG-LRU (arXiv:2402.19427):
+  r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)            input gate
+  log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence (h_t = a_t h_{t-1} + b_t is associative), giving O(log T) depth —
+the TPU-native replacement for the paper-series' CUDA linear-scan kernel.
+Decode is a single fused step with O(1) state, which is why
+recurrentgemma-2b runs the long_500k shape.
+
+Block layout (Griffin fig. 2): two branches from the input — (linear ->
+GeLU) gate and (linear -> causal conv1d(4) -> RG-LRU) — merged by product,
+then down-projected.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder
+from .config import ModelConfig
+
+_C = 8.0
+
+
+def init_rglru_block(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv_width
+    return {
+        "w_gate": pb.fan_in((d, w), ("embed", "state"), fan_axis=0),
+        "w_x": pb.fan_in((d, w), ("embed", "state"), fan_axis=0),
+        "conv": pb.normal((cw, w), (None, "state"), stddev=cw ** -0.5),
+        "conv_b": pb.zeros((w,), ("state",)),
+        "wa": pb.fan_in((w, w), ("state", None), fan_axis=0),
+        "ba": pb.zeros((w,), ("state",)),
+        "wi": pb.fan_in((w, w), ("state", None), fan_axis=0),
+        "bi": pb.zeros((w,), ("state",)),
+        # Lambda init so that a (at r=1) is uniform in [0.9, 0.999]:
+        # log a = -c*softplus(Lambda)  =>  Lambda = log(expm1(-log(a)/c))
+        "lam": pb.const(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)),
+            ("state",),
+        ),
+        "w_down": pb.fan_in((w, d), ("state", "embed"), fan_axis=0),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray, bias: jnp.ndarray,
+                 prev: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along T. x: (B, T, W); kernel: (cw, W).
+    prev: (B, cw-1, W) history for decode. Returns (y, new_prev)."""
+    cw = kernel.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)                       # (B, T+cw-1, W)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[i][None, None, :]
+        for i in range(cw)
+    ) + bias[None, None, :]
+    new_prev = xp[:, -(cw - 1):, :] if cw > 1 else prev
+    return y.astype(x.dtype), new_prev
+
+
+def _rglru_scan(xs: jnp.ndarray, params, h0: Optional[jnp.ndarray]):
+    """xs: (B, T, W) conv output. Returns (h (B,T,W), h_last)."""
+    f32 = jnp.float32
+    x = xs.astype(f32)
+    r = jax.nn.sigmoid(x @ params["wa"].astype(f32) + params["ba"].astype(f32))
+    i = jax.nn.sigmoid(x @ params["wi"].astype(f32) + params["bi"].astype(f32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(f32))[None, None, :] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0)) * (i * x)
+    if h0 is not None:
+        # absorb the carried state as a virtual first step: h_0 given.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None, :].astype(f32), b], axis=1)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def rglru_block(
+    params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, T, D). state: {"h": (B, W), "conv": (B, cw-1, W)}."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype), approximate=True)
+    u = x @ params["w_x"].astype(x.dtype)
+    prev = state["conv"].astype(x.dtype) if state is not None else None
+    u, new_conv = _causal_conv(u, params["conv"].astype(x.dtype), params["conv_b"].astype(x.dtype), prev)
+    h0 = state["h"] if state is not None else None
+    h, h_last = _rglru_scan(u, params, h0)
+    y = (h.astype(x.dtype) * gate) @ params["w_down"].astype(x.dtype)
+    return y, {"h": h_last, "conv": new_conv}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }

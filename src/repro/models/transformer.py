@@ -1,0 +1,283 @@
+"""Decoder-only transformer assembly over a repeating block pattern.
+
+Layers are *stacked* along a leading 'layers' axis and iterated with
+``lax.scan`` over pattern groups, so HLO size is O(1) in depth (compile-time
+essential for the 40-cell dry-run) and the remat policy applies per group.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import xlstm as xlstm_mod
+from .common import (
+    ParamBuilder,
+    layer_norm,
+    rms_norm,
+    softcap,
+    stack_layer_axes,
+    stack_layer_params,
+    unzip_params,
+)
+from .config import ModelConfig
+
+MIXER_INIT = {
+    "attn": attn_mod.init_attention,
+    "attn_local": attn_mod.init_attention,
+    "attn_global": attn_mod.init_attention,
+    "rglru": rglru_mod.init_rglru_block,
+    "mlstm": xlstm_mod.init_mlstm,
+    "slstm": xlstm_mod.init_slstm,
+}
+
+
+def _norm(cfg: ModelConfig, params, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params["scale"], params.get("bias"))
+    return rms_norm(x, params["scale"], scale_plus_one=cfg.rms_scale_plus_one)
+
+
+def _init_norm(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": pb.ones((d,), ("embed",)), "bias": pb.zeros((d,), ("embed",))}
+    init = pb.zeros if cfg.rms_scale_plus_one else pb.ones
+    return {"scale": init((d,), ("embed",))}
+
+
+def init_block(pb: ParamBuilder, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    p: Dict[str, Any] = {
+        "norm1": _init_norm(pb, cfg),
+        "mixer": MIXER_INIT[kind](pb, cfg),
+    }
+    has_mlp = cfg.d_ff > 0 or cfg.moe is not None
+    if has_mlp:
+        p["norm2"] = _init_norm(pb, cfg)
+        p["mlp"] = (
+            moe_mod.init_moe(pb, cfg) if cfg.moe is not None
+            else mlp_mod.init_mlp(pb, cfg)
+        )
+    if cfg.post_block_norm:
+        p["post_norm1"] = _init_norm(pb, cfg)
+        if has_mlp:
+            p["post_norm2"] = _init_norm(pb, cfg)
+    return p
+
+
+def apply_block(
+    params: Dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    kind: str,
+    cache: Optional[Dict[str, Any]] = None,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]], jnp.ndarray]:
+    """Returns (x', cache', aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, params["norm1"], x)
+    if kind.startswith("attn"):
+        local = kind == "attn_local"
+        y, cache = attn_mod.attention(
+            params["mixer"], h, cfg, local=local, cache=cache,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+    elif kind == "rglru":
+        y, cache = rglru_mod.rglru_block(params["mixer"], h, cfg, cache)
+    elif kind == "mlstm":
+        y, cache = xlstm_mod.mlstm(params["mixer"], h, cfg, cache)
+    elif kind == "slstm":
+        y, cache = xlstm_mod.slstm(params["mixer"], h, cfg, cache)
+    else:
+        raise ValueError(kind)
+    if cfg.post_block_norm:
+        y = _norm(cfg, params["post_norm1"], y)
+    x = x + y
+    if "mlp" in params:
+        h = _norm(cfg, params["norm2"], x)
+        if cfg.moe is not None:
+            y, aux = moe_mod.moe_block(params["mlp"], h, cfg)
+        else:
+            y = mlp_mod.mlp(params["mlp"], h, cfg)
+        if cfg.post_block_norm:
+            y = _norm(cfg, params["post_norm2"], y)
+        x = x + y
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full decoder stack
+# ---------------------------------------------------------------------------
+
+def init_decoder(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    """Build the stacked-parameter tree (values+axes zipped; unzip at top)."""
+    groups = []
+    for _ in range(cfg.n_groups):
+        group = {
+            f"b{j}": init_block(pb, cfg, kind)
+            for j, kind in enumerate(cfg.block_pattern)
+        }
+        groups.append(group)
+    # stack values; axes tree comes from one group with 'layers' prepended
+    values = [unzip_params(g)[0] for g in groups]
+    axes = unzip_params(groups[0])[1]
+    stacked = stack_layer_params(values)
+    stacked_axes = stack_layer_axes(axes)
+    return stacked, stacked_axes
+
+
+def decoder_stack(
+    stacked_params: Dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    caches: Optional[Dict[str, Any]] = None,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+    remat: bool = False,
+    unroll: bool = False,
+    remat_policy: str = "full",
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]], jnp.ndarray]:
+    """Scan the block-pattern groups. caches: tree stacked over groups.
+    ``unroll`` unrolls the group scan (dry-run cost-analysis fidelity).
+    ``remat_policy``: 'full' re-computes the whole group in backward (min
+    memory, +2ND flops); 'dots' saves matmul outputs (no matmul recompute,
+    more activation memory) — a §Perf hillclimb knob."""
+
+    def group_fn(carry, xs):
+        x, aux = carry
+        gp, gc = xs
+        new_caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            c_j = gc[f"b{j}"] if gc is not None else None
+            x, c_j, a = apply_block(
+                gp[f"b{j}"], x, cfg, kind, c_j,
+                use_pallas=use_pallas, interpret=interpret,
+            )
+            new_caches[f"b{j}"] = c_j
+            aux = aux + a
+        return (x, aux), new_caches
+
+    if remat:
+        policy = None
+        if remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots
+        group_fn = jax.checkpoint(group_fn, prevent_cse=False, policy=policy)
+
+    if caches is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: (group_fn(c, (p, None))[0], None),
+            (x, jnp.zeros((), jnp.float32)),
+            stacked_params,
+            unroll=unroll,
+        )
+        return x, None, aux
+    (x, aux), new_caches = jax.lax.scan(
+        group_fn, (x, jnp.zeros((), jnp.float32)), (stacked_params, caches),
+        unroll=unroll,
+    )
+    return x, new_caches, aux
+
+
+def init_lm(key, cfg: ModelConfig):
+    """Full LM init: returns (params, axes)."""
+    pb = ParamBuilder(key=key, param_dtype=jnp.dtype(cfg.param_dtype))
+    top: Dict[str, Any] = {}
+    top["embed"] = pb.normal((cfg.vocab, cfg.d_model), ("vocab", "embed"), stddev=0.02)
+    stacked, stacked_axes = init_decoder(pb, cfg)
+    top["final_norm"] = _init_norm(pb, cfg)
+    if not cfg.tie_embeddings:
+        top["lm_head"] = pb.fan_in((cfg.d_model, cfg.vocab), ("embed", "vocab"), fan_axis=0)
+    values, axes = unzip_params(top)
+    values["blocks"] = stacked
+    axes["blocks"] = stacked_axes
+    return values, axes
+
+
+def lm_forward(
+    params: Dict[str, Any],
+    tokens: Optional[jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    embeds: Optional[jnp.ndarray] = None,
+    caches: Optional[Dict[str, Any]] = None,
+    use_pallas: bool = False,
+    interpret: bool = False,
+    remat: bool = False,
+    unroll: bool = False,
+    remat_policy: str = "full",
+    last_only: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]], jnp.ndarray]:
+    """tokens (B, T) and/or precomputed ``embeds`` (B, P, D) prefix (vlm/audio
+    stubs). Returns (logits, caches', aux).
+
+    ``last_only``: project only the final position through the LM head
+    (prefill fast path — avoids materializing/all-reducing (B, T, vocab)
+    logits; at 32k context x 200k vocab that is a ~50 GB fp32 tensor)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(cdt))
+    if tokens is not None:
+        emb = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+        parts.append(emb)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    x, caches, aux = decoder_stack(
+        params["blocks"], x, cfg, caches,
+        use_pallas=use_pallas, interpret=interpret, remat=remat, unroll=unroll,
+        remat_policy=remat_policy,
+    )
+    x = _norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, head.astype(cdt))
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, caches, aux
+
+
+def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                   ring_local: bool = False) -> Dict[str, Any]:
+    """Cache tree stacked over groups, keyed by pattern position.
+
+    ``ring_local``: local (sliding-window) layers get a bounded ring buffer
+    of exactly ``window`` slots instead of a full-context buffer — O(window)
+    memory/bandwidth per decode step (decode-only; see attention.py)."""
+
+    def one(kind):
+        if kind.startswith("attn"):
+            if (ring_local and kind == "attn_local" and cfg.window is not None
+                    and cfg.window < max_len):
+                c = attn_mod.init_cache(cfg, batch, cfg.window, dtype)
+                c["ring"] = jnp.ones((), jnp.int32)
+                return c
+            return attn_mod.init_cache(cfg, batch, max_len, dtype)
+        if kind == "rglru":
+            return rglru_mod.init_rglru_state(cfg, batch)
+        if kind == "mlstm":
+            return xlstm_mod.init_mlstm_state(cfg, batch)
+        if kind == "slstm":
+            return xlstm_mod.init_slstm_state(cfg, batch)
+        raise ValueError(kind)
+
+    caches = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        c = one(kind)
+        caches[f"b{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_groups,) + a.shape), c
+        )
+    return caches

@@ -1,0 +1,163 @@
+"""xLSTM blocks: sLSTM (scalar memory) and mLSTM (matrix memory).
+
+Faithful to arXiv:2405.04517 cell equations with exponential gating and the
+max-stabilizer state m_t:
+
+  sLSTM:  c_t = f' c_{t-1} + i' z ;  n_t = f' n_{t-1} + i' ;  h = o * c/n
+  mLSTM:  C_t = f' C_{t-1} + i' v k^T ;  n_t = f' n_{t-1} + i' k
+          h~  = C_t q / max(|n_t . q|, 1) ;  h = o * h~
+  where  m_t = max(f~ + m_{t-1}, i~),  i' = exp(i~ - m_t),
+         f' = exp(f~ + m_{t-1} - m_t).
+
+Both cells run as ``lax.scan`` over time (exact recurrence; O(1) HLO in T,
+O(1) state in sequence length — which is why xlstm-350m runs the long_500k
+decode shape).  Block-level simplifications vs. the paper's figure-9
+skeleton (documented in DESIGN.md): the mLSTM block's causal conv is
+omitted; projections are fused per cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    # input projections for (z, i, f, o); recurrent weights are block-diagonal
+    # per head: (H, dh, dh).
+    return {
+        "w_in": pb.fan_in((d, 4, H, dh), ("embed", None, "heads", "head_dim"), fan_axis=0),
+        "r": pb.fan_in((4, H, dh, dh), (None, "heads", "head_dim", None), fan_axis=2),
+        "b": pb.zeros((4, H, dh), (None, "heads", "head_dim")),
+        "w_out": pb.fan_in((H, dh, d), ("heads", "head_dim", "embed"), fan_axis=(0, 1)),
+    }
+
+
+def slstm(
+    params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, T, D). state: {c, n, m, h} each (B, H, dh). Returns (y, state')."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = {"c": z, "n": z, "m": jnp.full((B, H, dh), -1e30), "h": z}
+
+    pre = jnp.einsum("btd,dghk->btghk", x, params["w_in"].astype(x.dtype))  # (B,T,4,H,dh)
+    r = params["r"].astype(jnp.float32)
+    b = params["b"].astype(jnp.float32)
+
+    def step(s, pre_t):
+        # recurrent contribution from h_{t-1} (block-diagonal per head)
+        rec = jnp.einsum("bhk,ghkl->bghl", s["h"], r)            # (B,4,H,dh)
+        g = pre_t.astype(jnp.float32) + rec + b[None]
+        z_t = jnp.tanh(g[:, 0])
+        i_t = g[:, 1]
+        f_t = g[:, 2]
+        o_t = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(f_t + s["m"], i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + s["m"] - m_new)
+        c = f_p * s["c"] + i_p * z_t
+        n = f_p * s["n"] + i_p
+        h = o_t * c / jnp.maximum(jnp.abs(n), 1e-6)
+        return {"c": c, "n": n, "m": m_new, "h": h}, h
+
+    state, hs = jax.lax.scan(step, state, pre.swapaxes(0, 1))
+    y = jnp.einsum("tbhk,hkd->btd", hs.astype(x.dtype), params["w_out"].astype(x.dtype))
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(pb: ParamBuilder, cfg: ModelConfig) -> Dict[str, Any]:
+    d, H = cfg.d_model, cfg.n_heads
+    di = int(d * cfg.mlstm_proj_factor)
+    dh = di // H
+    return {
+        "w_up": pb.fan_in((d, di), ("embed", "ff"), fan_axis=0),
+        "w_gate": pb.fan_in((d, di), ("embed", "ff"), fan_axis=0),
+        "wq": pb.fan_in((di, H, dh), ("ff", "heads", "head_dim"), fan_axis=0),
+        "wk": pb.fan_in((di, H, dh), ("ff", "heads", "head_dim"), fan_axis=0),
+        "wv": pb.fan_in((di, H, dh), ("ff", "heads", "head_dim"), fan_axis=0),
+        "w_if": pb.fan_in((di, 2, H), ("ff", None, "heads"), fan_axis=0),
+        "b_if": pb.const(jnp.zeros((2, 1)) + jnp.array([[0.0], [1.0]]), (None, "heads")),
+        "w_down": pb.fan_in((di, d), ("ff", "embed"), fan_axis=0),
+    }
+
+
+def mlstm(
+    params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, T, D). state: {C (B,H,dh,dh), n (B,H,dh), m (B,H)}."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    di = int(D * cfg.mlstm_proj_factor)
+    dh = di // H
+    up = x @ params["w_up"].astype(x.dtype)                       # (B,T,di)
+    gate = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+    q = jnp.einsum("bti,ihk->bthk", up, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bti,ihk->bthk", up, params["wk"].astype(x.dtype)) / (dh ** 0.5)
+    v = jnp.einsum("bti,ihk->bthk", up, params["wv"].astype(x.dtype))
+    gif = jnp.einsum("bti,igh->btgh", up, params["w_if"].astype(x.dtype))
+    gif = gif.astype(jnp.float32) + params["b_if"].astype(jnp.float32)[None, None]
+
+    if state is None:
+        state = {
+            "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32),
+        }
+
+    def step(s, inp):
+        q_t, k_t, v_t, gif_t = inp                                # (B,H,dh) x3, (B,2,H)
+        i_t, f_t = gif_t[:, 0], jax.nn.log_sigmoid(gif_t[:, 1])   # (B,H)
+        m_new = jnp.maximum(f_t + s["m"], i_t)
+        i_p = jnp.exp(i_t - m_new)[..., None]                     # (B,H,1)
+        f_p = jnp.exp(f_t + s["m"] - m_new)[..., None]
+        kf, vf, qf = (a.astype(jnp.float32) for a in (k_t, v_t, q_t))
+        C = f_p[..., None] * s["C"] + i_p[..., None] * vf[..., :, None] * kf[..., None, :]
+        n = f_p * s["n"] + i_p * kf
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+        h = num / den[..., None]
+        return {"C": C, "n": n, "m": m_new}, h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), gif.swapaxes(0, 1))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.swapaxes(0, 1).reshape(B, T, di).astype(x.dtype)       # merge heads
+    y = (h * gate) @ params["w_down"].astype(x.dtype)
+    return y, state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30), "h": z}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    H = cfg.n_heads
+    di = int(cfg.d_model * cfg.mlstm_proj_factor)
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }

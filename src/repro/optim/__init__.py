@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, AdamWState, apply, init, schedule_lr  # noqa: F401

@@ -1,0 +1,100 @@
+"""AdamW + schedules + global-norm clipping, built from scratch (no optax).
+
+State is a pytree mirroring params: {m, v} in fp32 plus scalar step.  The
+distribution layer gives m/v ZeRO-1 shardings (see parallel/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray   # () int32
+    m: PyTree           # fp32, like params
+    v: PyTree           # fp32, like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    ))
+
+
+def apply(
+    cfg: AdamWConfig, params: PyTree, grads: PyTree, state: AdamWState,
+) -> Tuple[PyTree, AdamWState, dict]:
+    """One optimizer step. Returns (params', state', metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

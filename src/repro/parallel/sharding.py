@@ -1,0 +1,190 @@
+"""Logical-axis -> mesh-axis sharding rules, per (architecture, shape-kind).
+
+Every param leaf carries a tuple of logical axis names (built at init time
+by the same code that builds the values — see models/common.py).  This
+module turns those into ``NamedSharding``s for a given mesh:
+
+  * per-arch divisibility drives the rules: heads shard over 'model' when
+    n_heads % model_size == 0, else attention falls back to row-parallel
+    embed-dim sharding (phi4 24H, whisper 20H, llava 56H, rg 10H, xlstm 4H);
+  * MoE expert tensors shard experts over 'model' (EP); very large archs
+    (qwen3-235b) additionally FSDP-shard the expert ff dim over 'data';
+  * optimizer state gets ZeRO-1 treatment: the largest dim a param leaves
+    unsharded is sharded over 'data' when divisible;
+  * per-tensor conflicts (two logical axes mapping to the same mesh axis)
+    are resolved greedily left-to-right — e.g. (vocab->model, embed->model)
+    keeps vocab sharded and replicates embed for that tensor only.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+PyTree = Any
+
+AxisRule = Dict[str, Optional[str]]
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, opts=None) -> AxisRule:
+    opts = opts or {}
+    model_n = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    rules: AxisRule = {
+        "layers": None,
+        "head_dim": None,
+        "conv": None,
+    }
+    heads_ok = _div(cfg.n_heads, model_n)
+    rules["heads"] = "model" if heads_ok else None
+    rules["kv_heads"] = "model" if _div(cfg.n_kv_heads, model_n) else None
+    # Fallback when heads don't divide the model axis (DESIGN.md §5): either
+    # row-parallel attention via the embed dim (default baseline), or — the
+    # §Perf variant — replicate the (small) attention params entirely and
+    # keep activations collective-free (opts["attn_replicate"]).
+    if not heads_ok and _div(cfg.d_model, model_n) and not opts.get("attn_replicate"):
+        rules["embed"] = "model"
+    else:
+        rules["embed"] = None
+    ff = cfg.moe.d_ff_expert if cfg.moe is not None else cfg.d_ff
+    ff = ff or int(cfg.d_model * cfg.mlstm_proj_factor)
+    rules["ff"] = "model" if _div(ff, model_n) else None
+    if cfg.moe is not None and _div(cfg.moe.n_experts, model_n):
+        rules["experts"] = "model"
+        # FSDP the expert ff dim over 'data' when a model-only shard of the
+        # params would blow past ~8 GB/device (qwen3-235b).
+        if "data" in mesh.axis_names:
+            data_n = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+            if cfg.n_params() * 2 / max(model_n, 1) > 8e9 and _div(ff, data_n):
+                rules["ff"] = "data"
+    else:
+        rules["experts"] = None
+    rules["vocab"] = "model" if _div(cfg.vocab, model_n) else None
+    w = cfg.lru_width or cfg.d_model
+    rules["state"] = "model" if _div(w, model_n) else None
+    return rules
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], rules: AxisRule) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec, dropping
+    per-tensor duplicate mesh-axis assignments (greedy, left-to-right)."""
+    used = set()
+    out = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None or m in used:
+            out.append(None)
+        else:
+            out.append(m)
+            used.add(m)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, axes_tree: PyTree, rules: AxisRule) -> PyTree:
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, spec_for_axes(a, rules)),
+        axes_tree,
+        is_leaf=is_axes,
+    )
+
+
+def opt_state_shardings(mesh: Mesh, axes_tree: PyTree, rules: AxisRule,
+                        shapes_tree: PyTree) -> PyTree:
+    """ZeRO-1: like the param sharding, plus shard the largest remaining
+    unsharded dim over 'data' when divisible."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_n = names.get("data", 1)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+
+    def one(axes, shape):
+        spec = list(spec_for_axes(axes, rules))
+        if "data" not in spec and data_n > 1:
+            # largest unsharded, data-divisible dim
+            cands = [
+                (shape[i], i) for i in range(len(shape))
+                if spec[i] is None and _div(shape[i], data_n)
+            ]
+            if cands:
+                _, i = max(cands)
+                spec[i] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Shard the leading batch dim over ('pod','data') as divisibility
+    allows; remaining dims replicated."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = []
+    if "pod" in names and "data" in names:
+        if _div(batch, names["pod"] * names["data"]):
+            axes = ["pod", "data"]
+        elif _div(batch, names["data"]):
+            axes = ["data"]
+    elif "data" in names and _div(batch, names["data"]):
+        axes = ["data"]
+    first = tuple(axes) if axes else None
+    return P(first, *([None] * extra_dims))
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_tree: PyTree,
+                    batch: int, rules: AxisRule) -> PyTree:
+    """Decode caches: batch over ('pod','data'); KV heads over 'model' when
+    divisible, else head_dim over 'model' (qwen3 kv=4, granite kv=1).
+
+    Cache layouts: attn {k,v}: (groups, B, Hkv, T, hd); recurrent states
+    carry (groups, B, ...) — batch-shard dim 1, and shard the widest state
+    dim over 'model' when the rules allow."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = names.get("model", 1)
+    bspec = batch_spec(mesh, batch, extra_dims=0)
+    b_axis = bspec[0]
+    kv_ok = _div(cfg.n_kv_heads, model_n)
+    hd_ok = _div(cfg.head_dim_, model_n)
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = leaf.ndim
+        if name == "enc_out" and nd == 3:  # whisper encoder output (B, T, D)
+            return NamedSharding(mesh, P(b_axis, None, None))
+        if name in ("k", "v") and nd == 5:
+            if kv_ok:
+                return NamedSharding(mesh, P(None, b_axis, "model", None, None))
+            if hd_ok:
+                return NamedSharding(mesh, P(None, b_axis, None, None, "model"))
+            return NamedSharding(mesh, P(None, b_axis, None, None, None))
+        if name == "C" and nd == 5:  # mLSTM matrix state (g,B,H,dh,dh)
+            heads_ok = _div(cfg.n_heads, model_n)
+            return NamedSharding(
+                mesh, P(None, b_axis, "model" if heads_ok else None, None, None)
+            )
+        if nd >= 2:
+            spec = [None, b_axis] + [None] * (nd - 2)
+            # shard a trailing state dim over model if divisible (rg-lru h)
+            if name in ("h", "conv") and rules.get("state") == "model" and \
+                    _div(leaf.shape[-1], model_n):
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def estimate_bytes(tree: PyTree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree)
+    )

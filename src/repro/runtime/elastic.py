@@ -1,0 +1,110 @@
+"""Elastic runtime: failure detection -> mesh shrink -> reshard-restore.
+
+The CCP timeout ladder (Alg. 1 l.13-14) feeds this layer: a worker whose
+backoff crosses the drop threshold is declared dead, the runtime rebuilds a
+mesh over the surviving devices, restores the latest checkpoint with the
+*new* shardings (checkpoint.restore reshards transparently), and training
+resumes; re-admission grows the mesh back the same way.
+
+In-step tolerance (no restart) is the coded gradient aggregation in
+runtime/train_loop.py; this module handles the slower path when capacity
+actually changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from .. import checkpoint as ckpt_mod
+from ..core.scheduler import CCPScheduler
+
+
+def submesh(devices: Sequence, data: int, model: int) -> Mesh:
+    """Build a (data, model) mesh over an explicit device subset."""
+    devs = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    ckpt_dir: str
+    ckpt_every: int = 20
+    min_data: int = 1
+
+
+class ElasticTrainer:
+    """Drives train/fail/shrink/restore cycles.
+
+    ``build`` is a factory: (mesh) -> (state, step_fn, shardings) where
+    state = (params, opt_state); it is re-invoked after every topology
+    change so shardings/compilation always match the current mesh.
+    """
+
+    def __init__(self, cfg: ElasticConfig, build: Callable, all_devices=None):
+        self.cfg = cfg
+        self.build = build
+        self.devices = list(all_devices if all_devices is not None else jax.devices())
+        self.failed: set[int] = set()
+        self.ckpt = ckpt_mod.AsyncCheckpointer(cfg.ckpt_dir)
+        self.step = 0
+        self.mesh: Optional[Mesh] = None
+        self.state = None
+        self.step_fn = None
+        self.shardings = None
+        self.scheduler: Optional[CCPScheduler] = None
+
+    # -- topology ----------------------------------------------------------
+
+    def alive(self):
+        return [d for i, d in enumerate(self.devices) if i not in self.failed]
+
+    def _shape_for(self, n: int, model: int):
+        data = max(n // model, self.cfg.min_data)
+        return data, model
+
+    def rebuild(self, model_axis: int):
+        alive = self.alive()
+        data, model = self._shape_for(len(alive), model_axis)
+        self.mesh = submesh(alive, data, model)
+        self.state, self.step_fn, self.shardings = self.build(self.mesh)
+        self.scheduler = CCPScheduler(n_workers=data)
+        if ckpt_mod.latest_step(self.cfg.ckpt_dir) is not None:
+            target = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state
+            )
+            self.state, meta = ckpt_mod.restore(
+                self.cfg.ckpt_dir, None, target, self.shardings
+            )
+            self.step = int(meta.get("step", self.step))
+
+    # -- events ------------------------------------------------------------
+
+    def fail_device(self, idx: int, model_axis: int):
+        """Simulated hard failure: checkpoint state is the recovery point."""
+        self.ckpt.wait()
+        self.failed.add(idx)
+        self.rebuild(model_axis)
+
+    def recover_device(self, idx: int, model_axis: int):
+        self.failed.discard(idx)
+        self.rebuild(model_axis)
+
+    # -- training ----------------------------------------------------------
+
+    def run(self, n_steps: int, batch_fn: Callable[[int, Mesh], dict]):
+        losses = []
+        for _ in range(n_steps):
+            batch = batch_fn(self.step, self.mesh)
+            self.state, metrics = self.step_fn(self.state, batch)
+            losses.append(float(metrics["loss"]))
+            self.step += 1
+            if self.step % self.cfg.ckpt_every == 0:
+                self.ckpt.save_async(self.step, self.state,
+                                     metadata={"step": self.step})
+        self.ckpt.wait()
+        return losses

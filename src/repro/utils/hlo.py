@@ -1,0 +1,94 @@
+"""Parse compiled (post-SPMD) HLO text for collective operations.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+traffic; we recover it by summing result-shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute in the
+optimized HLO, with replica-group sizes for the per-op ring cost model in
+utils/roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL = r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+# result types between '=' and the op name; ops may be fused/async (-start)
+_LINE = re.compile(
+    r"=\s*(?P<types>[^=]*?)\s*(?P<op>" + _COLL + r")(?P<suffix>-start)?\("
+)
+_SHAPE = re.compile(r"(?P<dt>[a-z]+\d*)\[(?P<dims>[0-9,]*)\]")
+_GROUPS = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int          # result bytes (per device)
+    group_size: int
+    in_entry: bool = True  # ENTRY computation (once per step) vs. loop body
+
+
+def _shape_bytes(types: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(types):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    in_entry = False
+    for line in hlo_text.splitlines():
+        # computation headers sit at column 0: "ENTRY %main ... {" / "%body ... {"
+        if line and not line[0].isspace() and "{" in line:
+            in_entry = line.lstrip().startswith("ENTRY")
+            continue
+        if "-done(" in line:
+            continue  # async completion re-lists the type; start was counted
+        m = _LINE.search(line)
+        if not m:
+            continue
+        kind = m.group("op")
+        b = _shape_bytes(m.group("types"))
+        if b == 0:
+            continue
+        ops.append(CollectiveOp(kind=kind, bytes=b,
+                                group_size=_group_size(line), in_entry=in_entry))
+    return ops
+
+
+def collective_summary(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """{kind: {count, bytes}} over the whole module."""
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for op in parse_collectives(hlo_text):
+        out[op.kind]["count"] += 1
+        out[op.kind]["bytes"] += op.bytes
+    return dict(out)

@@ -1,0 +1,134 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware constants (assignment spec; TPU v5e-class):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Per-op collective wire-cost model (ring algorithms, per device):
+  all-reduce         2 * S * (P-1)/P      (S = result bytes = shard bytes)
+  all-gather         S * (P-1)/P          (S = result bytes = full bytes)
+  reduce-scatter     S * (P-1)            (S = result bytes = full/P)
+  all-to-all         S * (P-1)/P
+  collective-permute S
+Multi-link torus parallelism is not credited — terms are conservative.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .hlo import CollectiveOp, parse_collectives
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # B/s per chip
+ICI_BW = 50e9           # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float          # per device
+    hbm_bytes: float          # per device
+    wire_bytes: float         # per device
+    model_flops: Optional[float] = None  # 6ND-style useful flops (per device)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time: overlapped terms -> max."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if self.model_flops is None or self.hlo_flops == 0:
+            return None
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / (bound_s * PEAK): how close the step is to the
+        compute roofline, counting only useful flops."""
+        if self.model_flops is None or self.bound_s == 0:
+            return None
+        return self.model_flops / (self.bound_s * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def wire_bytes(ops: List[CollectiveOp]) -> float:
+    total = 0.0
+    for op in ops:
+        p = max(op.group_size, 1)
+        if op.kind == "all-reduce":
+            total += 2.0 * op.bytes * (p - 1) / p
+        elif op.kind == "all-gather":
+            total += op.bytes * (p - 1) / p
+        elif op.kind == "reduce-scatter":
+            total += op.bytes * (p - 1)
+        elif op.kind == "all-to-all":
+            total += op.bytes * (p - 1) / p
+        elif op.kind == "collective-permute":
+            total += op.bytes
+    return total
+
+
+def derive(
+    cost_analysis: Dict[str, float],
+    hlo_text: str,
+    model_flops_per_device: Optional[float] = None,
+) -> Roofline:
+    flops = float(cost_analysis.get("flops", 0.0))
+    bytes_accessed = float(cost_analysis.get("bytes accessed", 0.0))
+    ops = parse_collectives(hlo_text)
+    wb = wire_bytes(ops)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=wb / ICI_BW,
+        hlo_flops=flops,
+        hbm_bytes=bytes_accessed,
+        wire_bytes=wb,
+        model_flops=model_flops_per_device,
+    )
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """Useful (6ND-style) FLOPs per device for one step of the given shape.
+
+    train: 6 * N_active * tokens  (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode: 2 * N_active * batch  (one token per sequence)
+    Attention flops beyond the 6ND convention are excluded (convention).
+    """
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode
+        total = 2.0 * n * shape.global_batch
+    return total / n_devices

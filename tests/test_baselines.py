@@ -1,0 +1,63 @@
+"""Tests for the uncoded and HCMM baselines."""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, simulator, theory
+
+
+def test_uncoded_allocation_sums_to_R():
+    mu = np.array([1.0, 2.0, 4.0, 1.0])
+    a = np.full(4, 0.5)
+    for rule in ("mean", "mu"):
+        r = baselines.uncoded_allocation(1000, mu, a, rule)
+        assert r.sum() == 1000
+        assert np.all(r >= 0)
+
+
+def test_uncoded_mean_rule_inverse_to_mean():
+    mu = np.array([1.0, 4.0])
+    a = np.array([0.5, 0.5])
+    r = baselines.uncoded_allocation(900, mu, a, "mean")
+    # E[beta] = 1.5 vs 0.75 -> loads 1:2
+    np.testing.assert_allclose(r, [300, 600])
+
+
+def test_hcmm_u_star_solves_fixed_point():
+    for mu_a in (0.1, 0.5, 1.0, 5.0):
+        u = baselines._hcmm_u_star(mu_a)
+        assert u > 0
+        np.testing.assert_allclose(np.log1p(u + mu_a), u, atol=1e-8)
+
+
+def test_hcmm_loads_overprovision():
+    """HCMM must allocate > R total (redundancy) and give faster helpers more."""
+    mu = np.array([1.0, 2.0, 4.0] * 10)
+    a = np.full(30, 0.5)
+    loads = baselines.hcmm_loads(2000, mu, a)
+    assert loads.sum() > 2000
+    by_mu = [loads[mu == m].mean() for m in (1.0, 2.0, 4.0)]
+    assert by_mu[0] < by_mu[1] < by_mu[2]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 500), R=st.integers(100, 2000))
+def test_property_hcmm_loads_positive_and_bounded(seed, R):
+    rng = np.random.default_rng(seed)
+    n = 20
+    mu = rng.choice([1.0, 2.0, 4.0], n)
+    a = rng.choice([0.25, 0.5, 1.0], n)
+    loads = baselines.hcmm_loads(R, mu, a)
+    assert np.all(loads >= 0)
+    assert R <= loads.sum() <= 3 * R  # sane redundancy factor
+
+
+def test_run_uncoded_and_hcmm_return_finite_T():
+    cfg = simulator.ScenarioConfig(N=20, scenario=2)
+    u = baselines.run_uncoded(jax.random.PRNGKey(0), cfg, 500)
+    h = baselines.run_hcmm(jax.random.PRNGKey(0), cfg, 500)
+    assert np.isfinite(u["T"]) and u["T"] > 0
+    assert np.isfinite(h["T"]) and h["T"] > 0
+    # HCMM (straggler-tolerant) should not be slower than uncoded in Sc2
+    assert h["T"] <= u["T"] * 1.2

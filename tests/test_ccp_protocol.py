@@ -1,0 +1,120 @@
+"""Tests for the CCP estimator (Algorithm 1 state machine)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ccp
+
+
+def _cfg(R=1000, alpha=0.25):
+    return ccp.CCPConfig(Bx=8.0 * R, Br=8.0, Back=1.0, alpha=alpha)
+
+
+def test_fraction_constants():
+    c = _cfg(R=1000)
+    np.testing.assert_allclose(c.data_scale, (8000 + 8) / (8000 + 1))
+    np.testing.assert_allclose(c.back_frac, 8 / 8008)
+    np.testing.assert_allclose(c.fwd_frac, 8000 / 8001)
+
+
+def test_first_packet_initialization():
+    """Alg.1 lines 6-7: first packet sets Tu to the forward-trip estimate and
+    seeds the EWMA with the first RTT sample."""
+    c = _cfg()
+    s = ccp.init_state(1)
+    rtt_ack = jnp.array([0.010])
+    tx, tr = jnp.array([0.0]), jnp.array([1.0])
+    s1, tti = ccp.on_computed(s, c, tx, tr, jnp.zeros(1), rtt_ack, jnp.array([True]))
+    np.testing.assert_allclose(float(s1.rtt_data[0]), c.data_scale * 0.010, rtol=1e-6)
+    np.testing.assert_allclose(float(s1.Tu[0]), c.fwd_frac * 0.010, rtol=1e-6)
+    assert int(s1.m[0]) == 1
+    # E[beta] ~ Tr - back_trip - Tu ~ 1.0 - small
+    assert 0.97 < float(s1.e_beta[0]) < 1.0
+    # eq. (8): TTI <= Tr - Tx
+    assert float(tti[0]) <= 1.0 + 1e-6
+
+
+def test_estimator_converges_to_true_mean():
+    """Feed a synthetic ideal stream: beta=0.5 exactly, tiny RTT. E[beta] -> 0.5."""
+    c = _cfg()
+    s = ccp.init_state(1)
+    rtt = 0.002
+    beta = 0.5
+    tx_prev = 0.0
+    tr_prev = jnp.zeros(1)
+    for i in range(200):
+        tx = jnp.array([i * beta])  # ideal pacing
+        tr = jnp.array([i * beta + beta + rtt])
+        s, tti = ccp.on_computed(s, c, tx, tr, tr_prev, jnp.array([rtt]), jnp.array([True]))
+        tr_prev = tr
+    assert abs(float(s.e_beta[0]) - beta) < 0.02
+    assert abs(float(tti[0]) - beta) < 0.02
+
+
+def test_underutilization_accumulates_when_idle():
+    """If packets are sent far apart (XTT << RTT^data), Tu must grow."""
+    c = _cfg()
+    s = ccp.init_state(1)
+    rtt = 0.01
+    gap = 2.0  # collector sends every 2s; compute takes 0.5s -> idle 1.5s/packet
+    tr_prev = jnp.zeros(1)
+    tus = []
+    for i in range(10):
+        tx = jnp.array([i * gap])
+        tr = jnp.array([i * gap + 0.5 + rtt])
+        s, _ = ccp.on_computed(s, c, tx, tr, tr_prev, jnp.array([rtt]), jnp.array([True]))
+        tr_prev = tr
+        tus.append(float(s.Tu[0]))
+    assert tus[-1] > tus[1], "Tu should accumulate under-utilization"
+    # E[beta] stays near 0.5 despite the idle gaps (that's the whole point
+    # of the Tu correction in eq. (5))
+    assert abs(float(s.e_beta[0]) - 0.5) < 0.05
+
+
+def test_timeout_backoff_doubles_and_resets():
+    s = ccp.init_state(2)
+    s = s.replace(e_beta=jnp.array([1.0, 1.0]))
+    s = ccp.on_timeout(s, jnp.array([True, False]))
+    s = ccp.on_timeout(s, jnp.array([True, False]))
+    t = ccp.tti(s, jnp.array([10.0, 10.0]))
+    np.testing.assert_allclose(np.asarray(t), [4.0, 1.0])
+    # a successful receipt resets the backoff
+    c = _cfg()
+    s2, _ = ccp.on_computed(
+        s, c, jnp.zeros(2), jnp.ones(2), jnp.zeros(2),
+        jnp.array([0.01, 0.01]), jnp.array([True, True]),
+    )
+    np.testing.assert_allclose(np.asarray(s2.tti_backoff), [1.0, 1.0])
+
+
+def test_inactive_helpers_unchanged():
+    c = _cfg()
+    s = ccp.init_state(3)
+    active = jnp.array([True, False, True])
+    s1, _ = ccp.on_computed(
+        s, c, jnp.zeros(3), jnp.ones(3), jnp.zeros(3),
+        jnp.full(3, 0.01), active,
+    )
+    assert int(s1.m[1]) == 0
+    assert float(s1.rtt_data[1]) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    beta=st.floats(0.05, 5.0),
+    rtt=st.floats(1e-4, 0.05),
+    n_pkts=st.integers(5, 60),
+)
+def test_property_tti_never_exceeds_round_trip(beta, rtt, n_pkts):
+    """Invariant (8): TTI_{n,i} <= Tr_{n,i} - Tx_{n,i} always."""
+    c = _cfg()
+    s = ccp.init_state(1)
+    tr_prev = jnp.zeros(1)
+    for i in range(n_pkts):
+        tx = jnp.array([i * beta])
+        tr = jnp.array([i * beta + beta + rtt])
+        s, tti = ccp.on_computed(s, c, tx, tr, tr_prev, jnp.array([rtt]), jnp.array([True]))
+        assert float(tti[0]) <= float(tr[0] - tx[0]) + 1e-6
+        assert float(s.e_beta[0]) > 0
+        tr_prev = tr

@@ -1,0 +1,82 @@
+"""Tests for chunked/zstd/async checkpointing + reshard-on-restore."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+from repro.optim import adamw
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "layer": {"w": jax.random.normal(k1, (8, 16)),
+                  "b": jnp.zeros(16, jnp.bfloat16)},
+        "emb": jax.random.normal(k2, (32, 8)),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    ck.save(tmp_path, 5, t, metadata={"step": 5})
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    r, meta = ck.restore(tmp_path, 5, target)
+    assert meta["step"] == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_and_gc(tmp_path):
+    t = _tree(jax.random.PRNGKey(1))
+    for s in (1, 2, 3, 4):
+        ck.save(tmp_path, s, t, keep_last=2)
+    assert ck.latest_step(tmp_path) == 4
+    # gc kept only the last 2
+    assert sorted(p.name for p in tmp_path.glob("step_*")) == [
+        "step_000000003", "step_000000004"
+    ]
+
+
+def test_optimizer_state_roundtrip(tmp_path):
+    params = _tree(jax.random.PRNGKey(2))
+    state = adamw.init(params)
+    tree = {"params": params, "opt": state}
+    ck.save(tmp_path, 1, tree)
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    r, _ = ck.restore(tmp_path, 1, target)
+    assert int(r["opt"].step) == 0
+    np.testing.assert_array_equal(
+        np.asarray(r["params"]["layer"]["w"]), np.asarray(params["layer"]["w"])
+    )
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree(jax.random.PRNGKey(3))
+    acp = ck.AsyncCheckpointer(tmp_path)
+    acp.save_async(7, t, metadata={"step": 7})
+    acp.wait()
+    assert ck.latest_step(tmp_path) == 7
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = _tree(jax.random.PRNGKey(4))
+    ck.save(tmp_path, 1, t)
+    bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct((1,) + x.shape, x.dtype), t)
+    with pytest.raises(ValueError):
+        ck.restore(tmp_path, 1, bad)
+
+
+def test_restore_with_shardings(tmp_path):
+    """Reshard-on-restore: restore onto an explicit device placement."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(tmp_path, 1, t)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    r, _ = ck.restore(tmp_path, 1, target, sh)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["w"].sharding == sh["w"]

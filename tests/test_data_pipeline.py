@@ -1,0 +1,51 @@
+"""Tests for the deterministic synthetic data pipeline."""
+
+import numpy as np
+
+from repro.data import Prefetcher, SyntheticLM
+
+
+def test_batches_deterministic_in_step():
+    d1 = SyntheticLM(vocab=100, seq_len=8, global_batch=4, n_micro=2, seed=7)
+    d2 = SyntheticLM(vocab=100, seq_len=8, global_batch=4, n_micro=2, seed=7)
+    b1, b2 = d1.batch(13), d2.batch(13)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different steps differ
+    b3 = d1.batch(14)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_shapes_and_label_shift():
+    d = SyntheticLM(vocab=50, seq_len=8, global_batch=6, n_micro=3, seed=0)
+    b = d.batch(0)
+    assert b["tokens"].shape == (3, 2, 8)
+    assert b["labels"].shape == (3, 2, 8)
+    # labels are next-token targets of the same underlying stream
+    np.testing.assert_array_equal(b["tokens"][..., 1:], b["labels"][..., :-1])
+
+
+def test_learnable_signal_present():
+    """The copy-period structure makes some labels predictable."""
+    d = SyntheticLM(vocab=1000, seq_len=64, global_batch=8, seed=1, copy_period=4)
+    b = d.batch(0)
+    t, l = b["tokens"], b["labels"]
+    copies = (t == l).mean()
+    assert copies > 0.15  # ~1/copy_period of positions copy
+
+
+def test_prefetcher_order_and_stop():
+    d = SyntheticLM(vocab=100, seq_len=8, global_batch=4, seed=3)
+    pf = Prefetcher(d, start_step=5, depth=2)
+    s0, b0 = pf.next()
+    s1, b1 = pf.next()
+    assert (s0, s1) == (5, 6)
+    np.testing.assert_array_equal(b0["tokens"], d.batch(5)["tokens"])
+    pf.stop()
+
+
+def test_restart_reproduces_stream():
+    """Resuming at step k yields the same batch a fresh run would see."""
+    d = SyntheticLM(vocab=100, seq_len=8, global_batch=4, seed=9)
+    fresh = d.batch(42)
+    resumed = SyntheticLM(vocab=100, seq_len=8, global_batch=4, seed=9).batch(42)
+    np.testing.assert_array_equal(fresh["tokens"], resumed["tokens"])

@@ -1,0 +1,108 @@
+"""Integration: elastic shrink/restore + data pipeline + checkpointing,
+run on 8 host devices in a subprocess (train -> fail 4 devices -> resume on
+a smaller mesh from checkpoint -> loss continuity)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+        " --xla_force_host_platform_device_count=8"
+    import json, tempfile
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config
+    from repro.data import SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.parallel import sharding as shd
+    from repro.runtime.elastic import ElasticConfig, ElasticTrainer
+    from repro.runtime.train_loop import make_train_step
+
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=200,
+                                weight_decay=0.0)
+    GB, T = 8, 16
+    data = SyntheticLM(cfg.vocab, T, GB, n_micro=1, seed=0)
+
+    def build(mesh):
+        rules = shd.make_rules(cfg, mesh)
+        params, axes = model.init(jax.random.PRNGKey(0))
+        p_sh = shd.param_shardings(mesh, axes, rules)
+        params = jax.device_put(params, p_sh)
+        opt = adamw.init(params)
+        o_sh = adamw.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=shd.opt_state_shardings(mesh, axes, rules,
+                                      jax.tree.map(lambda x: x.shape, params)),
+            v=shd.opt_state_shardings(mesh, axes, rules,
+                                      jax.tree.map(lambda x: x.shape, params)),
+        )
+        opt = jax.device_put(opt, o_sh)
+        raw = make_train_step(model, opt_cfg, 1, pre_shaped=True)
+        def step_fn(state, batch):
+            p, o = state
+            with mesh:
+                p, o, metrics = jax.jit(raw)(p, o, batch)
+            return (p, o), metrics
+        return (params, opt), step_fn, (p_sh, o_sh)
+
+    def batch_fn(step, mesh):
+        return {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+
+    with tempfile.TemporaryDirectory() as d:
+        cfg_e = ElasticConfig(ckpt_dir=d, ckpt_every=5)
+        tr = ElasticTrainer(cfg_e, build)
+        tr.rebuild(model_axis=2)            # 4x2 mesh over 8 devices
+        losses_a = tr.run(12, batch_fn)     # ckpt at step 5, 10
+        step_before = tr.step
+        tr.fail_device(7, model_axis=2)     # lose a device: 7 alive -> 3x2 mesh
+        step_restored = tr.step             # rolled back to the checkpoint
+        losses_b = tr.run(8, batch_fn)
+        out = {
+            "losses_a": losses_a,
+            "losses_b": losses_b,
+            "resumed_step": step_before,
+            "step_after_restore": step_restored,
+            "mesh_shape": list(tr.mesh.devices.shape),
+        }
+    print("RESULT:" + json.dumps(out))
+    """
+)
+
+
+@pytest.mark.slow
+def test_elastic_failover_resume():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    # restored from the last checkpoint (step 10 <= 12)
+    assert out["step_after_restore"] <= out["resumed_step"]
+    assert out["step_after_restore"] >= 5
+    # mesh shrank: fewer than 8 devices in use
+    import numpy as np
+
+    assert int(np.prod(out["mesh_shape"])) < 8
+    # training continues sanely after restore (finite, roughly continuous)
+    la, lb = out["losses_a"], out["losses_b"]
+    assert all(x == x and x < 1e4 for x in lb)
+    assert lb[0] < la[0] + 1.0, "post-restore loss must not blow up"
+    # loss decreases over the whole run (learnable synthetic stream)
+    assert lb[-1] < la[0]

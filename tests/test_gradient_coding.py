@@ -1,0 +1,86 @@
+"""Tests for coded gradient aggregation (R-of-(R+K) DP)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gradient_coding as gc
+
+
+def test_parity_assignments_match_code():
+    code = gc.make_gradient_code(8, 4, seed=0)
+    assigns = gc.parity_assignments(code)
+    assert len(assigns) == 4
+    for k, nbrs in enumerate(assigns):
+        row = code.R + k
+        assert set(nbrs) == set(code.idx[row][code.mask[row]].tolist())
+        assert len(nbrs) <= 4  # d_max cap = compute redundancy bound
+
+
+def test_decode_weights_no_stragglers_is_systematic():
+    code = gc.make_gradient_code(8, 4, seed=1)
+    w = gc.decode_weights(code, np.arange(8))
+    np.testing.assert_allclose(w, np.ones(8), atol=1e-6)
+
+
+def test_decode_weights_recover_sum_with_losses():
+    code = gc.make_gradient_code(8, 4, seed=2)
+    rng = np.random.default_rng(0)
+    grads = rng.normal(size=(8, 5))
+    G = code.dense_generator()
+    coded = G @ grads  # (12, 5): systematic + parities
+    for lost in ([0], [3], [7, 2]):
+        surv = np.setdiff1d(np.arange(12), lost)
+        try:
+            w = gc.decode_weights(code, surv)
+        except ValueError:
+            continue  # undecodable pattern: legal, fountain contract
+        rec = w @ coded[surv]
+        np.testing.assert_allclose(rec, grads.sum(0), atol=1e-5)
+
+
+def test_coded_grad_sum_jnp():
+    code = gc.make_gradient_code(4, 2, seed=3)
+    grads = jnp.asarray(np.random.default_rng(1).normal(size=(4, 3)))
+    G = code.dense_generator()
+    parities = jnp.asarray(G[4:] @ np.asarray(grads))
+    # lose worker 1's systematic result
+    surv = [0, 2, 3, 4, 5]
+    w = gc.decode_weights(code, surv)
+    wfull = np.zeros(6, np.float32)
+    wfull[surv] = w
+    rec = gc.coded_grad_sum(grads, parities, jnp.asarray(wfull))
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(grads.sum(0)), atol=1e-5)
+
+
+def test_weight_table_patterns_valid():
+    code = gc.make_gradient_code(8, 4, seed=4)
+    pats, ws = gc.weight_table(code, max_stragglers=2, seed=0, n_patterns=16)
+    G = code.dense_generator()
+    for pat, w in zip(pats, ws):
+        np.testing.assert_allclose(w @ G, np.ones(8), atol=1e-5)
+        assert np.all(w[~pat] == 0)
+
+
+def test_expected_redundancy_bounded():
+    code = gc.make_gradient_code(16, 4, seed=5)
+    r = gc.expected_redundancy(code)
+    assert 0 < r <= 4 * 4 / 16 + 1e-9  # K * d_max / R
+
+
+@settings(max_examples=20, deadline=None)
+@given(R=st.integers(4, 16), K=st.integers(2, 6), seed=st.integers(0, 200))
+def test_property_single_loss_always_recoverable(R, K, seed):
+    """Coverage guarantees any single systematic loss decodes — feasible
+    whenever the parity slot budget K*d_max can cover all R sources."""
+    from hypothesis import assume
+
+    assume(K * 4 >= R)  # d_max=4 in make_gradient_code
+    code = gc.make_gradient_code(R, K, seed=seed)
+    lost = seed % R
+    surv = np.setdiff1d(np.arange(R + K), [lost])
+    w = gc.decode_weights(code, surv)  # must not raise
+    G = code.dense_generator()
+    np.testing.assert_allclose(w @ G[surv], np.ones(R), atol=1e-5)

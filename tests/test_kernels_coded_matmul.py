@@ -1,0 +1,124 @@
+"""Shape/dtype sweeps: Pallas coded_matmul + lt_encode vs. pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fountain
+from repro.kernels.coded_matmul import coded_matmul, coded_matmul_code, coded_matmul_ref
+from repro.kernels.coded_matmul.ref import lt_encode_ref
+from repro.kernels.lt_encode import lt_encode
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+def _mk(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "R,K,bm,kdim,ndim,bk,bn",
+    [
+        (4, 2, 8, 16, 16, 8, 8),
+        (6, 3, 16, 64, 32, 16, 16),
+        (8, 4, 8, 128, 128, 128, 128),   # MXU-aligned tiles
+        (3, 2, 32, 48, 24, 16, 8),       # non-square, odd tile counts
+        (10, 5, 8, 32, 8, 32, 8),        # single k tile
+    ],
+)
+def test_coded_matmul_sweep(R, K, bm, kdim, ndim, bk, bn, dtype):
+    code = fountain.make_lt_code(R=R, K=K, seed=R * 31 + K)
+    a = _mk(jax.random.PRNGKey(0), (R * bm, kdim), dtype)
+    x = _mk(jax.random.PRNGKey(1), (kdim, ndim), dtype)
+    idx, mask = jnp.asarray(code.idx), jnp.asarray(code.mask)
+    ref = coded_matmul_ref(a, x, idx, mask, bm)
+    out = coded_matmul(
+        a, x, idx, mask, bm=bm, bk=bk, bn=bn, use_pallas=True, interpret=True
+    )
+    assert out.shape == ((R + K) * bm, ndim)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 8,
+    )
+
+
+def test_coded_matmul_padding_path():
+    """Non-divisible k/n dims go through the padded path."""
+    code = fountain.make_lt_code(R=4, K=2, seed=7)
+    a = _mk(jax.random.PRNGKey(2), (4 * 8, 20), jnp.float32)
+    x = _mk(jax.random.PRNGKey(3), (20, 13), jnp.float32)
+    idx, mask = jnp.asarray(code.idx), jnp.asarray(code.mask)
+    ref = coded_matmul_ref(a, x, idx, mask, 8)
+    out = coded_matmul(
+        a, x, idx, mask, bm=8, bk=16, bn=8, use_pallas=True, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_coded_matmul_code_convenience():
+    code = fountain.make_lt_code(R=5, K=2, seed=3)
+    a = _mk(jax.random.PRNGKey(4), (5 * 16, 32), jnp.float32)
+    x = _mk(jax.random.PRNGKey(5), (32, 16), jnp.float32)
+    out = coded_matmul_code(a, x, code, use_pallas=True, interpret=True, bk=16, bn=16)
+    ref = coded_matmul_ref(a, x, jnp.asarray(code.idx),
+                           jnp.asarray(code.weights), 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_coded_matmul_systematic_prefix_is_plain_matmul():
+    """The systematic prefix of the output must equal A @ x exactly."""
+    code = fountain.make_lt_code(R=4, K=3, seed=11)
+    a = _mk(jax.random.PRNGKey(6), (4 * 8, 32), jnp.float32)
+    x = _mk(jax.random.PRNGKey(7), (32, 16), jnp.float32)
+    out = coded_matmul(
+        a, x, jnp.asarray(code.idx), jnp.asarray(code.mask),
+        bm=8, bk=16, bn=16, use_pallas=True, interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out[: 4 * 8]), np.asarray(a @ x), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "R,K,bm,ncols,bc",
+    [(4, 2, 8, 16, 8), (8, 4, 16, 128, 128), (5, 3, 8, 24, 8), (2, 1, 128, 256, 256)],
+)
+def test_lt_encode_sweep(R, K, bm, ncols, bc, dtype):
+    code = fountain.make_lt_code(R=R, K=K, seed=R * 17 + K)
+    a = _mk(jax.random.PRNGKey(8), (R * bm, ncols), dtype)
+    idx, mask = jnp.asarray(code.idx), jnp.asarray(code.mask)
+    ref = lt_encode_ref(a, idx, mask, bm)
+    out = lt_encode(a, idx, mask, bm=bm, bc=bc, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    R=st.integers(2, 8),
+    K=st.integers(1, 4),
+    bm=st.sampled_from([8, 16]),
+    kt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    seed=st.integers(0, 100),
+)
+def test_property_kernel_matches_oracle(R, K, bm, kt, nt, seed):
+    """Encode-matmul fusion == encode_ref ∘ matmul for random codes/shapes."""
+    code = fountain.make_lt_code(R=R, K=K, seed=seed)
+    kdim, ndim = 8 * kt, 8 * nt
+    a = _mk(jax.random.PRNGKey(seed), (R * bm, kdim), jnp.float32)
+    x = _mk(jax.random.PRNGKey(seed + 1), (kdim, ndim), jnp.float32)
+    idx, w = jnp.asarray(code.idx), jnp.asarray(code.weights)
+    out = coded_matmul(
+        a, x, idx, w, bm=bm, bk=8, bn=8, use_pallas=True, interpret=True
+    )
+    enc = fountain.encode(a.reshape(R, bm, kdim), code).reshape(-1, kdim)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(enc @ x), rtol=2e-4, atol=2e-4
+    )

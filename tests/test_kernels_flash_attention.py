@@ -1,0 +1,119 @@
+"""Shape/dtype/variant sweeps: Pallas flash attention vs. pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _qkv(key, B, Hq, Hkv, Tq, Tk, D, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = (jax.random.normal(kq, (B, Hq, Tq, D), jnp.float32) * 0.5).astype(dtype)
+    k = (jax.random.normal(kk, (B, Hkv, Tk, D), jnp.float32) * 0.5).astype(dtype)
+    v = jax.random.normal(kv, (B, Hkv, Tk, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Tq,Tk,D,bq,bk",
+    [
+        (1, 2, 2, 32, 32, 16, 16, 16),     # MHA
+        (2, 4, 2, 64, 64, 32, 32, 16),     # GQA group 2
+        (1, 8, 1, 64, 64, 32, 16, 32),     # MQA
+        (1, 2, 2, 128, 128, 64, 128, 128), # MXU-aligned
+        (2, 2, 1, 48, 96, 16, 16, 16),     # Tk > Tq (prefix cache)
+    ],
+)
+def test_flash_causal_sweep(B, Hq, Hkv, Tq, Tk, D, bq, bk, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, Hq, Hkv, Tq, Tk, D, dtype)
+    off = Tk - Tq
+    ref = attention_ref(q, k, v, causal=True, q_offset=off)
+    out = flash_attention(
+        q, k, v, causal=True, q_offset=off,
+        use_pallas=True, interpret=True, bq=bq, bk=bk,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 8,
+    )
+
+
+@pytest.mark.parametrize("window", [8, 16, 64])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 2, 2, 64, 64, 32, jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    out = flash_attention(
+        q, k, v, causal=True, window=window,
+        use_pallas=True, interpret=True, bq=16, bk=16,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("softcap", [10.0, 30.0, 50.0])
+def test_flash_softcap(softcap):
+    """gemma2-style logit soft-capping."""
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 1, 32, 32, 16, jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, softcap=softcap)
+    out = flash_attention(
+        q, k, v, causal=True, softcap=softcap,
+        use_pallas=True, interpret=True, bq=16, bk=16,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-4)
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 2, 2, 32, 48, 16, jnp.float32)
+    ref = attention_ref(q, k, v, causal=False)
+    out = flash_attention(
+        q, k, v, causal=False, use_pallas=True, interpret=True, bq=16, bk=16
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-4)
+
+
+def test_flash_unaligned_lengths_padding():
+    """Tq/Tk not multiples of the block sizes exercise the padding path."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 2, 2, 37, 53, 16, jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, q_offset=53 - 37)
+    out = flash_attention(
+        q, k, v, causal=True, q_offset=53 - 37,
+        use_pallas=True, interpret=True, bq=16, bk=16,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-4)
+
+
+def test_flash_decode_shape():
+    """Tq=1 against a long KV cache (the serve_step shape)."""
+    q, k, v = _qkv(jax.random.PRNGKey(5), 4, 8, 2, 1, 256, 32, jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, q_offset=255)
+    out = flash_attention(
+        q, k, v, causal=True, q_offset=255,
+        use_pallas=True, interpret=True, bq=16, bk=64,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    Tq=st.integers(8, 48),
+    extra=st.integers(0, 32),
+    Hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    window=st.sampled_from([None, 8, 32]),
+    seed=st.integers(0, 50),
+)
+def test_property_flash_matches_ref(Tq, extra, Hkv, group, window, seed):
+    Tk = Tq + extra
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, Hkv * group, Hkv, Tq, Tk, 16,
+                   jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, window=window, q_offset=extra)
+    out = flash_attention(
+        q, k, v, causal=True, window=window, q_offset=extra,
+        use_pallas=True, interpret=True, bq=16, bk=16,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-4)

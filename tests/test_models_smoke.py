@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and no NaNs; plus prefill/decode-step
+consistency against the full forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+
+def _batch_for(cfg, key, B=2, T=16):
+    kt, ke = jax.random.split(key)
+    tokens = jax.random.randint(kt, (B, T), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend == "audio_stub":
+        batch["embeds"] = jax.random.normal(ke, (B, cfg.enc_frames, cfg.d_model)) * 0.02
+    elif cfg.frontend == "vision_stub":
+        batch["embeds"] = jax.random.normal(ke, (B, cfg.n_patches, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    # axes tree mirrors params tree
+    assert set(jax.tree.leaves(jax.tree.map(lambda _: 1, params))) == {1}
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+    if cfg.enc_dec:
+        logits = model.forward(params, batch["tokens"], batch["embeds"])
+        exp_t = batch["tokens"].shape[1]
+    else:
+        logits = model.forward(params, batch["tokens"], batch.get("embeds"))
+        exp_t = batch["tokens"].shape[1] + (
+            batch["embeds"].shape[1] if batch.get("embeds") is not None else 0
+        )
+    assert logits.shape == (2, exp_t, cfg.vocab), logits.shape
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_no_nans(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+    # CE at init should be near log(vocab)
+    assert float(loss) < np.log(cfg.vocab) + 2.0
+    gflat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in gflat), f"{arch}: NaN grads"
+    # gradient must actually flow to the embedding
+    assert float(jnp.abs(grads["embed"]).max()) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_matches_forward(arch):
+    """KV-cache/recurrent-state decode must agree with the full pass."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, cfg.vocab)
+    kw = {}
+    if cfg.frontend == "audio_stub":
+        kw["embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.enc_frames, cfg.d_model)) * 0.02
+    elif cfg.frontend == "vision_stub":
+        kw["embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_patches, cfg.d_model)) * 0.02
+
+    if cfg.enc_dec:
+        full = model.forward(params, tokens, kw["embeds"])
+    else:
+        full = model.forward(params, tokens, kw.get("embeds"))
+
+    cache = model.init_cache(B, max_len=64)
+    if cfg.enc_dec:
+        last, cache = model.prefill(params, tokens[:, :-1], cache, embeds=kw["embeds"])
+    elif kw.get("embeds") is not None:
+        # vlm: prefix embeds are part of the prefill
+        last, cache = model.prefill(params, tokens[:, :-1], cache, embeds=kw["embeds"])
+    else:
+        last, cache = model.prefill(params, tokens[:, :-1], cache)
+    step, cache = model.decode_step(params, tokens[:, -1:], cache)
+    np.testing.assert_allclose(
+        np.asarray(step), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3,
+    )
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "recurrentgemma-2b"])
+def test_recurrent_state_is_O1_in_seq(arch):
+    """The long_500k applicability rule: state size must not grow with the
+    cache length for SSM/hybrid archs (modulo the bounded local window)."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+
+    def state_bytes(max_len):
+        cache = model.init_cache(1, max_len=max_len)
+        return sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree.leaves(cache)
+        )
+
+    b1, b2 = state_bytes(64), state_bytes(128)
+    if arch == "xlstm-350m":
+        assert b1 == b2, "xLSTM state must be O(1) in sequence length"
+    else:
+        # hybrid: only the local-attn window cache grows (bounded by window)
+        assert b2 <= 2.5 * b1
+
+
+def test_param_counts_match_table():
+    """n_params() sanity against the published sizes (within 25%)."""
+    expected = {
+        "gemma2-27b": 27e9,
+        "mistral-nemo-12b": 12e9,
+        "phi4-mini-3.8b": 3.8e9,
+        "granite-20b": 20e9,
+        "llava-next-34b": 34e9,
+        # the *assigned* config (48L x 64e x d_ff 1408) computes to ~29B;
+        # the production Moonlight-16B-A3B has 27 layers.  We implement the
+        # assigned numbers exactly, so the expectation follows the config.
+        "moonshot-v1-16b-a3b": 28.9e9,
+        "qwen3-moe-235b-a22b": 235e9,
+        "whisper-large-v3": 1.5e9,
+        "recurrentgemma-2b": 2.7e9,
+        "xlstm-350m": 0.35e9,
+    }
+    for arch, target in expected.items():
+        n = get_config(arch).n_params()
+        assert 0.6 * target < n < 1.6 * target, (arch, n, target)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    act = cfg.n_active_params()
+    assert 15e9 < act < 30e9, act  # ~22B active

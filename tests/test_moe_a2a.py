@@ -1,0 +1,64 @@
+"""The explicit shard_map MoE must match the dense/gather MoE exactly when
+capacity is non-binding (8 host devices, 4x2 and 2x4 meshes)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+        " --xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.common import ParamBuilder
+    from repro.models import moe as moe_mod
+    from repro.models.moe_a2a import moe_block_a2a
+
+    out = {}
+    for (dn, mn) in ((4, 2), (2, 4)):
+        cfg = get_config("qwen3-moe-235b-a22b", smoke=True)  # 8e top-2 cf=8
+        pb = ParamBuilder(key=jax.random.PRNGKey(0))
+        from repro.models.common import unzip_params
+        params, _ = unzip_params(moe_mod.init_moe(pb, cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (dn * 2, 6, cfg.d_model),
+                              jnp.float32) * 0.5
+        ref, aux_ref = moe_mod.moe_block(params, x, cfg)
+        mesh = make_host_mesh(data=dn, model=mn)
+        with mesh:
+            got, aux = jax.jit(
+                lambda p, xx: moe_block_a2a(p, xx, cfg, mesh)
+            )(params, x)
+        key = f"{dn}x{mn}"
+        out[f"err_{key}"] = float(jnp.abs(got - ref).max())
+        out[f"aux_err_{key}"] = abs(float(aux) - float(aux_ref))
+    print("RESULT:" + json.dumps(out))
+    """
+)
+
+
+@pytest.mark.slow
+def test_moe_a2a_matches_dense():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    for k, v in out.items():
+        if k.startswith("err_"):
+            assert v < 2e-5, (k, v, out)
+        else:
+            assert v < 1e-4, (k, v, out)

@@ -1,0 +1,67 @@
+"""Tests for the CCP runtime scheduler (telemetry -> allocation)."""
+
+import numpy as np
+
+from repro.core.scheduler import CCPScheduler
+
+
+def test_allocation_tracks_speed():
+    """Workers 2x faster must converge to ~2x the microbatches (eq. 23)."""
+    sched = CCPScheduler(n_workers=4)
+    speeds = np.array([1.0, 1.0, 2.0, 2.0])  # units/sec
+    for _ in range(30):
+        alloc = sched.allocation(24)
+        durations = alloc / speeds + 1e-4
+        sched.observe_step(durations)
+    alloc = sched.allocation(24)
+    assert alloc.sum() == 24
+    fast = alloc[2:].mean()
+    slow = alloc[:2].mean()
+    assert 1.6 < fast / slow < 2.5, alloc
+
+
+def test_adapts_to_speed_change():
+    """Time-varying resources: a worker that slows down mid-run loses share."""
+    sched = CCPScheduler(n_workers=2, alpha=0.5)
+    for step in range(60):
+        alloc = sched.allocation(20)
+        speed0 = 2.0 if step < 30 else 0.25
+        durations = [alloc[0] / speed0, alloc[1] / 1.0]
+        sched.observe_step(durations)
+    alloc = sched.allocation(20)
+    assert alloc[0] < alloc[1], alloc
+
+
+def test_timeout_backoff_and_death():
+    sched = CCPScheduler(n_workers=3, drop_after=2)
+    for _ in range(5):
+        sched.allocation(9)
+        sched.observe_step([1.0, 1.0, np.inf])  # worker 2 unresponsive
+    assert sched.dead_mask()[2]
+    assert not sched.dead_mask()[0]
+    alloc = sched.allocation(9)
+    assert alloc[2] == 0, "dead worker must get no work"
+    assert alloc.sum() == 9
+
+
+def test_recovery_restores_share():
+    sched = CCPScheduler(n_workers=2, drop_after=4)
+    speeds = np.array([1.0, 1.0])
+    for _ in range(3):
+        a = sched.allocation(8)
+        sched.observe_step([a[0] / speeds[0], np.inf])
+    degraded = sched.allocation(8)
+    for _ in range(20):
+        a = sched.allocation(8)
+        sched.observe_step(a / speeds)  # worker 1 responsive again, same speed
+    recovered = sched.allocation(8)
+    assert recovered[1] >= degraded[1]
+    assert recovered[1] >= 3  # near-equal share restored
+
+
+def test_deadline_scales_with_estimate():
+    sched = CCPScheduler(n_workers=2)
+    sched.allocation(4)
+    sched.observe_step([1.0, 4.0])
+    d = sched.timeout_deadline()
+    assert d[1] > d[0]

@@ -1,0 +1,102 @@
+"""Tests for the logical-axis sharding rules (divisibility, fallbacks,
+conflict resolution, ZeRO-1)."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Stand-in with the production axis sizes (no real devices needed)."""
+
+    def __init__(self, shape, names):
+        self.devices = np.empty(shape, dtype=object)
+        self.axis_names = names
+
+
+MESH1 = FakeMesh((16, 16), ("data", "model"))
+MESH2 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_heads_shard_when_divisible():
+    cfg = get_config("gemma2-27b")       # 32 heads % 16 == 0
+    rules = shd.make_rules(cfg, MESH1)
+    assert rules["heads"] == "model"
+    assert rules["vocab"] == "model"     # 256000 % 16 == 0
+    assert rules["embed"] is None
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "llava-next-34b",
+                                  "whisper-large-v3", "recurrentgemma-2b"])
+def test_embed_fallback_when_heads_dont_divide(arch):
+    cfg = get_config(arch)
+    rules = shd.make_rules(cfg, MESH1)
+    assert rules["heads"] is None
+    assert rules["embed"] == "model", f"{arch}: needs row-parallel fallback"
+
+
+def test_moe_expert_parallel():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    rules = shd.make_rules(cfg, MESH1)
+    assert rules["experts"] == "model"
+    # 235B: FSDP kicks in — expert ff dim sharded over data
+    assert rules["ff"] == "data"
+    cfg2 = get_config("moonshot-v1-16b-a3b")
+    rules2 = shd.make_rules(cfg2, MESH1)
+    assert rules2["experts"] == "model"
+    assert rules2["ff"] == "model"       # small enough, no FSDP
+
+
+def test_whisper_vocab_not_divisible_replicates():
+    cfg = get_config("whisper-large-v3")  # 51866 % 16 != 0
+    rules = shd.make_rules(cfg, MESH1)
+    assert rules["vocab"] is None
+
+
+def test_conflict_resolution_keeps_first():
+    rules = {"vocab": "model", "embed": "model"}
+    spec = shd.spec_for_axes(("vocab", "embed"), rules)
+    assert spec == P("model", None)
+    spec2 = shd.spec_for_axes(("embed", "vocab"), rules)
+    assert spec2 == P("model", None)
+
+
+def test_spec_for_axes_layers_never_sharded():
+    cfg = get_config("gemma2-27b")
+    rules = shd.make_rules(cfg, MESH1)
+    spec = shd.spec_for_axes(("layers", "embed", "heads", "head_dim"), rules)
+    assert spec[0] is None and spec[2] == "model"
+
+
+def test_batch_spec_divisibility():
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    assert shd.batch_spec(mesh, 256)[0] == ("pod", "data")  # 256 % 32 == 0
+    assert shd.batch_spec(mesh, 16)[0] == "data"            # only data fits
+    assert shd.batch_spec(mesh, 1)[0] is None               # long_500k b=1
+
+
+def test_every_arch_has_some_model_sharding():
+    """No arch may end up fully replicated on the production mesh."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        rules = shd.make_rules(cfg, MESH1)
+        assert any(v == "model" for v in rules.values()), (arch, rules)
+
+
+def test_opt_state_zero1(tmp_path):
+    """ZeRO-1: an unsharded-by-param dim gets the data axis when divisible."""
+    import jax
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # pretend data axis is 16 by checking rule math via FakeMesh path:
+    cfg = get_config("gemma2-27b")
+    rules = shd.make_rules(cfg, MESH1)
+    # an attention weight (embed, heads, head_dim): heads->model; ZeRO should
+    # grab embed (4608 % 16 == 0) for the optimizer moments
+    spec = shd.spec_for_axes(("embed", "heads", "head_dim"), rules)
+    assert spec == P(None, "model", None)

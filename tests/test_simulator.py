@@ -1,0 +1,128 @@
+"""Integration tests: the discrete-event simulator reproduces the paper's
+qualitative and quantitative claims (small-scale versions of Figs. 3-5)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import baselines, simulator, theory
+
+
+@pytest.fixture(scope="module")
+def sc1():
+    return simulator.ScenarioConfig(N=50, scenario=1)
+
+
+@pytest.fixture(scope="module")
+def sc2():
+    return simulator.ScenarioConfig(N=50, scenario=2)
+
+
+def _mean_over_reps(fn, cfg, R, reps=4, seed0=0):
+    return float(np.mean([fn(jax.random.PRNGKey(seed0 + r), cfg, R)["T"] for r in range(reps)]))
+
+
+def test_timeline_monotone_and_fifo(sc1):
+    out = simulator.run_ccp(jax.random.PRNGKey(0), sc1, R=500)
+    # completion certified
+    assert out["T"] > 0
+    # r_n splits the work: counts sum to >= R+K
+    assert out["r_n"].sum() >= 500 + sc1.K(500)
+
+
+def test_ccp_close_to_best_and_theory_sc1(sc1):
+    R = 1000
+    t_ccp = _mean_over_reps(simulator.run_ccp, sc1, R)
+    t_best = _mean_over_reps(simulator.run_best, sc1, R)
+    o = simulator.run_ccp(jax.random.PRNGKey(0), sc1, R)
+    t_opt = theory.t_opt_model1(R, sc1.K(R), o["a"], o["mu"])
+    # paper: CCP within a few percent of Best and Optimum-Analysis
+    assert t_ccp <= t_best * 1.10
+    assert abs(t_ccp - t_opt) / t_opt < 0.25  # helper draw noise at N=50
+
+
+def test_ccp_beats_baselines_sc1(sc1):
+    R = 1000
+    t_ccp = _mean_over_reps(simulator.run_ccp, sc1, R)
+    t_unc = _mean_over_reps(
+        lambda k, c, R: baselines.run_uncoded(k, c, R, rule="mean"), sc1, R
+    )
+    t_hcmm = _mean_over_reps(baselines.run_hcmm, sc1, R)
+    assert t_ccp < t_unc, "CCP must beat uncoded (paper Fig 3a)"
+    assert t_ccp < t_hcmm, "CCP must beat HCMM (paper Fig 3a)"
+
+
+def test_ccp_beats_baselines_sc2_with_big_margin(sc2):
+    R = 1000
+    t_ccp = _mean_over_reps(simulator.run_ccp, sc2, R)
+    t_unc = _mean_over_reps(
+        lambda k, c, R: baselines.run_uncoded(k, c, R, rule="mean"), sc2, R
+    )
+    t_hcmm = _mean_over_reps(baselines.run_hcmm, sc2, R)
+    # paper Fig 3b: ~40% over HCMM, ~69% over uncoded
+    assert (t_hcmm - t_ccp) / t_hcmm > 0.2
+    assert (t_unc - t_ccp) / t_unc > 0.45
+    # and HCMM beats uncoded in scenario 2 (it was designed for it)
+    assert t_hcmm < t_unc
+
+
+def test_efficiency_exceeds_99pct(sc1):
+    out = simulator.run_ccp(jax.random.PRNGKey(3), sc1, R=2000)
+    eff = np.nanmean(out["efficiency"])
+    assert eff > 0.99, f"paper: ~99.7% efficiency, got {eff}"
+
+
+def test_efficiency_close_to_theory(sc1):
+    """Simulated efficiency should exceed the analytical average (12), which
+    the paper notes is a (slightly loose) lower bound."""
+    out = simulator.run_ccp(jax.random.PRNGKey(4), sc1, R=2000)
+    # RTT^data per helper = Bx/C_up + Br/C_down ~ (Bx+Br)/rate
+    rtt = (8.0 * 2000 + 8.0) / out["rate"]
+    gamma = theory.efficiency(rtt, out["a"], out["mu"])
+    assert np.nanmean(out["efficiency"]) > np.mean(gamma) - 0.01
+
+
+def test_naive_gap_grows_with_R_on_slow_links():
+    """Fig 5: with 0.1-0.2 Mbps links, T_naive - T_ccp grows with R while
+    T_ccp - T_best stays flat."""
+    cfg = simulator.ScenarioConfig(
+        N=10, scenario=2, rate_lo=0.1e6, rate_hi=0.2e6
+    )
+    gaps_naive, gaps_best = [], []
+    for R in (200, 800):
+        t_ccp = _mean_over_reps(simulator.run_ccp, cfg, R, reps=3)
+        t_naive = _mean_over_reps(simulator.run_naive, cfg, R, reps=3)
+        t_best = _mean_over_reps(simulator.run_best, cfg, R, reps=3)
+        gaps_naive.append(t_naive - t_ccp)
+        gaps_best.append(t_ccp - t_best)
+    assert gaps_naive[1] > gaps_naive[0], "naive gap must grow with R"
+    assert gaps_naive[1] > 4 * gaps_best[1], "best gap must stay small"
+
+
+def test_scenario2_t_opt_realized_close():
+    cfg = simulator.ScenarioConfig(N=50, scenario=2)
+    R = 1000
+    t_ccp = _mean_over_reps(simulator.run_ccp, cfg, R, reps=4)
+    ub = None
+    o = simulator.run_ccp(jax.random.PRNGKey(0), cfg, R)
+    ub = theory.t_opt_model2_upper(R, cfg.K(R), o["a"], o["mu"])
+    assert t_ccp < ub * 1.15  # Thm 3: E[T_opt] <= ub; CCP tracks T_opt
+
+
+def test_completion_time_certification():
+    """If the horizon is too short the order statistic must be flagged."""
+    import jax.numpy as jnp
+
+    tr = jnp.array([[1.0, 2.0, 3.0], [10.0, 20.0, 30.0]])
+    t, valid = simulator.completion_time(tr, 4)
+    assert not bool(valid) or float(t) <= 3.0
+
+
+def test_allocation_tracks_heterogeneity(sc1):
+    """CCP's realized per-helper packet counts follow eq. (23): r_n
+    proportional to 1/E[beta_n]."""
+    out = simulator.run_ccp(jax.random.PRNGKey(5), sc1, R=4000)
+    e_beta = out["a"] + 1.0 / out["mu"]
+    pred = theory.optimal_allocation(4000, sc1.K(4000), e_beta)
+    corr = np.corrcoef(pred, out["r_n"])[0, 1]
+    assert corr > 0.97, f"allocation correlation {corr}"

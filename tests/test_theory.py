@@ -1,0 +1,83 @@
+"""Tests for the paper's closed-form theory (Theorems 1-3)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+
+
+def test_expected_underutilization_branches():
+    mu = 2.0
+    # RTT >= 1/mu branch: constant 1/(e*mu)
+    big = theory.expected_underutilization(1.0, mu)
+    np.testing.assert_allclose(big, 1.0 / (np.e * mu), rtol=1e-12)
+    # RTT -> 0: idle vanishes (the congestion cap Tr-Tx feeds the helper)
+    small = theory.expected_underutilization(0.0, mu)
+    np.testing.assert_allclose(small, 0.0, atol=1e-12)
+    # continuity at RTT = 1/mu
+    at = theory.expected_underutilization(1.0 / mu - 1e-9, mu)
+    np.testing.assert_allclose(at, big, rtol=1e-5)
+
+
+def test_expected_underutilization_monotone_in_rtt():
+    mu = 3.0
+    rtts = np.linspace(0, 1.0 / mu, 50)
+    vals = theory.expected_underutilization(rtts, mu)
+    assert np.all(np.diff(vals) >= -1e-12)
+
+
+def test_efficiency_paper_regime_matches_99_4pct():
+    """Paper §6: R=8000, mu in {1,3,9}, a=1/mu -> average theoretical
+    efficiency 99.4115%."""
+    # RTT^data = Bx/C_up + Br/C_down ~ (8*8000 + 8)/15e6 ~ 4.3 ms
+    rtt = (8.0 * 8000 + 8.0) / 15e6
+    mus = np.array([1.0, 3.0, 9.0])
+    g = theory.efficiency(rtt, 1.0 / mus, mus)
+    assert np.all(g > 0.98)
+    np.testing.assert_allclose(g.mean(), 0.994115, atol=0.002)
+
+
+def test_t_opt_model1_example():
+    # single helper: T = (R+K) * E[beta]
+    t = theory.t_opt_model1(100, 0, np.array([0.5]), np.array([2.0]))
+    np.testing.assert_allclose(t, 100 * 1.0)
+
+
+def test_t_opt_model2_jensen():
+    """Realized (29) averaged over draws <= upper bound (30) (Jensen)."""
+    rng = np.random.default_rng(0)
+    a = np.full(50, 0.5)
+    mu = rng.choice([1.0, 2.0, 4.0], 50)
+    reps = []
+    for _ in range(300):
+        beta = a + rng.exponential(1.0 / mu)
+        reps.append(theory.t_opt_model2_realized(1000, 50, beta))
+    assert np.mean(reps) <= theory.t_opt_model2_upper(1000, 50, a, mu) * 1.01
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(2, 30),
+    total=st.integers(1, 500),
+    seed=st.integers(0, 10_000),
+)
+def test_property_largest_remainder_rounding(n, total, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random(n) + 1e-3
+    loads = total * w / w.sum()
+    r = theory.largest_remainder_round(loads, total)
+    assert r.sum() == total
+    assert np.all(r >= 0)
+    assert np.all(np.abs(r - loads) <= 1.0 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 64), seed=st.integers(0, 1000))
+def test_property_optimal_allocation_sums_and_inverse_prop(n, seed):
+    rng = np.random.default_rng(seed)
+    e_beta = rng.uniform(0.1, 5.0, n)
+    r = theory.optimal_allocation(1000, 50, e_beta)
+    np.testing.assert_allclose(r.sum(), 1050, rtol=1e-9)
+    # slower helpers receive fewer packets
+    order = np.argsort(e_beta)
+    assert np.all(np.diff(r[order]) <= 1e-9)
