@@ -13,14 +13,38 @@ import numpy as np
 OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
 
 
+def _stats(a: np.ndarray) -> Dict[str, float]:
+    return {"mean": float(a.mean()), "std": float(a.std()),
+            "sem": float(a.std() / np.sqrt(len(a)))}
+
+
 def mc(fn: Callable, cfg, R: int, reps: int, seed0: int = 0) -> Dict[str, float]:
-    """Monte-Carlo mean/std of fn(key, cfg, R)["T"] over ``reps`` draws."""
+    """Sequential Monte-Carlo mean/std of fn(key, cfg, R)["T"] over ``reps``
+    draws.  Used for the numpy-driven baselines (uncoded/HCMM); the simulator
+    modes go through the vmapped :func:`mc_sim` instead."""
     ts = []
     for r in range(reps):
         ts.append(fn(jax.random.PRNGKey(seed0 * 100003 + r), cfg, R)["T"])
-    a = np.asarray(ts)
-    return {"mean": float(a.mean()), "std": float(a.std()),
-            "sem": float(a.std() / np.sqrt(len(a)))}
+    return _stats(np.asarray(ts))
+
+
+def mc_sim(cfg, R: int, reps: int, mode: str, seed0: int = 0) -> Dict[str, float]:
+    """Batched Monte-Carlo over ``reps`` vmapped keys via simulator.run_batch
+    (one compile + one device call instead of ``reps`` sequential runs).
+    Uncertified reps (horizon cap hit under heavy churn -> T possibly inf or
+    understated) are excluded from the stats and counted in ``invalid``."""
+    from repro.core import simulator
+
+    out = simulator.run_batch(simulator.batch_keys(reps, seed0), cfg, R, mode)
+    t, valid = np.asarray(out["T"]), np.asarray(out["valid"])
+    if not valid.any():
+        raise RuntimeError(
+            f"mc_sim: no certified rep at horizon cap (M={out['M']}) for "
+            f"mode={mode!r}, R={R} — churn config too hostile?"
+        )
+    stats = _stats(t[valid])
+    stats["invalid"] = int((~valid).sum())
+    return stats
 
 
 def emit(name: str, rows: List[dict], derived: str = "") -> None:

@@ -7,7 +7,6 @@ measured >= theory (theory is the average-analysis lower curve).
 
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from repro.configs.ccp_paper import EFFICIENCY, FIG4
@@ -18,18 +17,18 @@ from .common import emit
 
 def run(reps: int = 20, R: int = 8000) -> dict:
     rows = []
+    keys = simulator.batch_keys(reps)
     for sc in (1, 2):
         cfg = FIG4[sc]
-        effs, theos = [], []
-        for r in range(reps):
-            out = simulator.run_ccp(jax.random.PRNGKey(r), cfg, R)
-            effs.append(np.nanmean(out["efficiency"]))
-            rtt = (8.0 * R + 8.0) / out["rate"]
-            theos.append(np.mean(theory.efficiency(rtt, out["a"], out["mu"])))
+        out = simulator.run_batch(keys, cfg, R, "ccp")
+        eff = float(np.nanmean(out["efficiency"]))
+        rtt = (8.0 * R + 8.0) / out["rate"]
+        theo = float(np.mean(theory.efficiency(
+            rtt.reshape(-1), out["a"].reshape(-1), out["mu"].reshape(-1))))
         rows.append({
             "scenario": sc,
-            "measured": float(np.mean(effs)),
-            "theory_eq12": float(np.mean(theos)),
+            "measured": eff,
+            "theory_eq12": theo,
         })
     emit("efficiency", rows,
          derived=";".join(

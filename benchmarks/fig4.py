@@ -10,7 +10,7 @@ import numpy as np
 from repro.configs.ccp_paper import FIG4
 from repro.core import baselines, simulator, theory
 
-from .common import emit, mc
+from .common import emit, mc, mc_sim
 
 
 def run(reps: int = 40, r_sweep=(1000, 2000, 4000, 8000)) -> dict:
@@ -19,8 +19,8 @@ def run(reps: int = 40, r_sweep=(1000, 2000, 4000, 8000)) -> dict:
     for sc, cfg in FIG4.items():
         for R in r_sweep:
             row = {"scenario": sc, "R": R}
-            row["ccp"] = mc(simulator.run_ccp, cfg, R, reps)
-            row["best"] = mc(simulator.run_best, cfg, R, reps)
+            row["ccp"] = mc_sim(cfg, R, reps, "ccp")
+            row["best"] = mc_sim(cfg, R, reps, "best")
             row["uncoded_mean"] = mc(
                 lambda k, c, r: baselines.run_uncoded(k, c, r, rule="mean"),
                 cfg, R, reps)

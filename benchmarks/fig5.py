@@ -6,18 +6,17 @@ Anchor: T_naive - T_ccp grows with R; T_ccp - T_best stays small/flat.
 from __future__ import annotations
 
 from repro.configs.ccp_paper import FIG5
-from repro.core import simulator
 
-from .common import emit, mc
+from .common import emit, mc_sim
 
 
 def run(reps: int = 30, r_sweep=(200, 400, 800, 1600)) -> dict:
     rows = []
     for R in r_sweep:
         row = {"R": R}
-        row["ccp"] = mc(simulator.run_ccp, FIG5, R, reps)
-        row["best"] = mc(simulator.run_best, FIG5, R, reps)
-        row["naive"] = mc(simulator.run_naive, FIG5, R, reps)
+        row["ccp"] = mc_sim(FIG5, R, reps, "ccp")
+        row["best"] = mc_sim(FIG5, R, reps, "best")
+        row["naive"] = mc_sim(FIG5, R, reps, "naive")
         row["gap_naive"] = row["naive"]["mean"] - row["ccp"]["mean"]
         row["gap_best"] = row["ccp"]["mean"] - row["best"]["mean"]
         rows.append(row)

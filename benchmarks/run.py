@@ -6,9 +6,10 @@ simulation benchmarks whose deliverable is the derived statistics).
   fig3        — delay vs rows, Scenarios 1/2 (paper Fig. 3)
   fig4        — delay vs rows, mu in {1,3,9} (paper Fig. 4)
   fig5        — CCP vs best/naive gaps on slow links (paper Fig. 5)
+  fig_churn   — delay/efficiency under churn + loss (beyond-paper, §1 claim)
   efficiency  — measured vs eq.(12) efficiency (paper §6 table)
   overhead    — fountain codec failure prob + O(R) timing (paper §2 claims)
-  kernel      — Pallas hot-spot roofline accounting (beyond-paper)
+  kernel      — Pallas hot-spot roofline accounting + batched-MC speedup
   roofline    — aggregate the dry-run cells (EXPERIMENTS.md §Roofline)
 
 Run everything:  PYTHONPATH=src python -m benchmarks.run
@@ -32,7 +33,8 @@ def main() -> None:
                     help="reduced rep counts (CI smoke)")
     args = ap.parse_args()
 
-    from . import efficiency, fig3, fig4, fig5, kernel_bench, overhead, roofline_report
+    from . import (efficiency, fig3, fig4, fig5, fig_churn, kernel_bench,
+                   overhead, roofline_report)
 
     reps = 8 if args.fast else 40
     sweep = (500, 1000) if args.fast else (1000, 2000, 4000, 8000)
@@ -42,6 +44,9 @@ def main() -> None:
         "fig5": lambda: fig5.run(reps=max(reps // 2, 5),
                                  r_sweep=(200, 400) if args.fast
                                  else (200, 400, 800, 1600)),
+        "fig_churn": lambda: fig_churn.run(
+            reps=reps,
+            drop_sweep=(0.0, 0.1, 0.3) if args.fast else fig_churn.DROP_SWEEP),
         "efficiency": lambda: efficiency.run(reps=4 if args.fast else 20,
                                              R=2000 if args.fast else 8000),
         "overhead": overhead.run,

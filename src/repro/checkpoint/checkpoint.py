@@ -4,7 +4,13 @@ Layout of one checkpoint directory (atomic via tmp-dir + rename):
 
   step_000123/
     index.msgpack      {path: {shape, dtype, file, raw_bytes}}  + metadata
-    <leaf files>.zst   zstandard-compressed little-endian raw tensor bytes
+                       + codec ('zstd' | 'zlib')
+    <leaf files>.zst   compressed little-endian raw tensor bytes
+                       (.zz when the zlib fallback codec wrote them)
+
+``zstandard`` is optional: when the wheel is absent we fall back to stdlib
+``zlib`` and record the codec in the index so either build can restore the
+other's checkpoints (zstd-written checkpoints still need the wheel to read).
 
 Restore accepts a tree of NamedShardings and ``device_put``s each leaf
 directly into its (possibly different) target sharding, which is what the
@@ -18,16 +24,53 @@ import os
 import pathlib
 import re
 import shutil
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep; zlib fallback keeps checkpoints working
+    zstandard = None
 
 PyTree = Any
 
 _LEAF_RE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
+
+# Leaf-file suffix per codec, so external tools that trust the extension
+# (zstd CLI, file-type scanners) are not lied to; restore goes by the
+# index's ``file`` entries, never the suffix.
+_CODEC_SUFFIX = {"zstd": ".zst", "zlib": ".zz"}
+
+
+def _compress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        # one compressor per call: zstandard contexts are NOT thread-safe
+        # for concurrent compress() on the same object
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    if codec == "zlib":
+        return zlib.compress(data, 3)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress(data: bytes, codec: str, raw_bytes: int) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the 'zstandard' module "
+                "is not installed; install it or re-save with the zlib codec"
+            )
+        return zstandard.ZstdDecompressor().decompress(
+            data, max_output_size=raw_bytes
+        )
+    if codec == "zlib":
+        return zlib.decompress(data)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -69,15 +112,14 @@ def save(
     leaves = _flatten(tree)
     index: Dict[str, Dict] = {}
 
+    codec = DEFAULT_CODEC
+
     def write_one(item: Tuple[str, Any]):
         key, leaf = item
         arr = np.asarray(leaf)
-        fname = _LEAF_RE.sub("_", key) + ".zst"
-        # one compressor per call: zstandard contexts are NOT thread-safe
-        # for concurrent compress() on the same object
-        cctx = zstandard.ZstdCompressor(level=3)
+        fname = _LEAF_RE.sub("_", key) + _CODEC_SUFFIX[codec]
         with open(tmp / fname, "wb") as f:
-            f.write(cctx.compress(np.ascontiguousarray(arr).tobytes()))
+            f.write(_compress(np.ascontiguousarray(arr).tobytes(), codec))
         return key, {
             "shape": list(arr.shape),
             # str(dtype) ('bfloat16', 'float32', ...) survives ml_dtypes,
@@ -92,7 +134,7 @@ def save(
             index[key] = entry
     with open(tmp / "index.msgpack", "wb") as f:
         f.write(msgpack.packb({"leaves": index, "step": step,
-                               "metadata": metadata or {}}))
+                               "codec": codec, "metadata": metadata or {}}))
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -130,7 +172,7 @@ def restore(
     with open(d / "index.msgpack", "rb") as f:
         meta = msgpack.unpackb(f.read())
     index = meta["leaves"]
-    dctx = zstandard.ZstdDecompressor()
+    codec = meta.get("codec", "zstd")  # pre-codec checkpoints were zstd-only
 
     leaves_t, treedef = jax.tree_util.tree_flatten(target)
     flat_target = _flatten(target)
@@ -141,7 +183,7 @@ def restore(
         if entry is None:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         with open(d / entry["file"], "rb") as f:
-            raw = dctx.decompress(f.read(), max_output_size=entry["raw_bytes"])
+            raw = _decompress(f.read(), codec, entry["raw_bytes"])
         arr = np.frombuffer(raw, dtype=_np_dtype(entry["dtype"])).reshape(entry["shape"])
         exp_shape = tuple(tgt.shape)
         if tuple(arr.shape) != exp_shape:

@@ -133,10 +133,20 @@ def on_computed(
     return new_state, tti_i
 
 
-def on_timeout(state: CCPState, active: jnp.ndarray) -> CCPState:
-    """Alg. 1 line 13: double the effective TTI of unresponsive helpers."""
+def on_timeout(state: CCPState, active: jnp.ndarray,
+               max_backoff: float | None = None) -> CCPState:
+    """Alg. 1 line 13: double the effective TTI of unresponsive helpers.
+
+    ``max_backoff`` caps the multiplicative factor so a helper that drops out
+    for a long stretch is still re-probed at a bounded interval and its
+    rejoin is detected (the paper leaves the cap unspecified; the simulator
+    passes its churn-model cap, the runtime scheduler may pass None).
+    """
+    doubled = state.tti_backoff * 2.0
+    if max_backoff is not None:
+        doubled = jnp.minimum(doubled, max_backoff)
     return state.replace(
-        tti_backoff=jnp.where(active, state.tti_backoff * 2.0, state.tti_backoff)
+        tti_backoff=jnp.where(active, doubled, state.tti_backoff)
     )
 
 

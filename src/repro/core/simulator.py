@@ -1,8 +1,8 @@
 """Vectorized discrete-event simulation of CCP and the paper's baselines.
 
 Reproduces §6 of the paper: a collector offloads fountain-coded packets to
-``N`` heterogeneous helpers over lossless links with random per-packet rates;
-helper ``n`` computes packet ``i`` in ``beta_{n,i}`` (Scenario 1: i.i.d.
+``N`` heterogeneous helpers over links with random per-packet rates; helper
+``n`` computes packet ``i`` in ``beta_{n,i}`` (Scenario 1: i.i.d.
 shifted-exponential per packet; Scenario 2: one draw per helper).  The
 completion time is when the collector has received ``R+K`` computed packets.
 
@@ -32,6 +32,38 @@ Timing model per packet (helper n, packet i):
   Tr_i     = done_i + d_down_i                  (result downlink)
   RTTack_i = d_up_i + d_ack_i                   (receipt ACK, measured)
   idle_i   = max(0, arrive_i - done_{i-1})      (helper under-utilization)
+
+Dynamics / churn (beyond the paper's static Scenarios 1-2)
+----------------------------------------------------------
+``ScenarioConfig.churn = ChurnConfig(...)`` switches on a piecewise-constant
+time-varying resource model: time is divided into phases of ``period``
+seconds (``n_phases`` distinct phases, wrapping around), and in each phase a
+helper is independently *down* with prob ``p_down`` (packets sent to it are
+lost) or *degraded* with prob ``p_slow`` (its service rate ``mu_n`` is
+divided by ``slowdown``).  On top, each packet is lost i.i.d. with prob
+``drop_prob``.  A lost packet never produces a ``Tr``; the collector reacts
+with Algorithm 1 lines 13-14: the TTI backoff doubles (``ccp.on_timeout``,
+capped at ``max_backoff``) and the retransmission fires at the timeout
+deadline ``TO = 2*(TTI + RTT^data)`` (``ccp.timeout_deadline`` form).  A
+successful receipt resets the backoff, so helpers that rejoin are re-ramped.
+``churn=None`` (default) runs the exact static paper model, bit-for-bit.
+
+Batched Monte-Carlo (``run_batch``)
+-----------------------------------
+``run_batch(keys, cfg, R, mode)`` vmaps the whole per-rep pipeline (helper
+draw -> packet tables -> stream scan -> order statistic) over a batch of
+PRNG keys with one shared, power-of-two-bucketed horizon ``M`` and a single
+certification pass: if any rep's order statistic is uncertified the shared
+horizon doubles and the whole batch re-runs (one extra compile, amortized
+across the sweep).  Typical usage::
+
+    keys = simulator.batch_keys(reps=40, seed0=0)
+    out = simulator.run_batch(keys, cfg, R=2000, mode="ccp")
+    out["T"]           # (reps,) completion times
+    out["efficiency"]  # (reps, N) per-helper measured efficiency
+
+This replaces a Python loop of ``reps`` jitted calls with one vmapped call
+and is the engine behind ``benchmarks/fig3|4|5|churn``.
 """
 
 from __future__ import annotations
@@ -48,11 +80,15 @@ from . import ccp as ccp_mod
 from . import theory
 
 __all__ = [
+    "ChurnConfig",
     "ScenarioConfig",
     "draw_helpers",
     "draw_packet_tables",
+    "draw_dynamics",
     "simulate_stream",
     "completion_time",
+    "batch_keys",
+    "run_batch",
     "run_ccp",
     "run_best",
     "run_naive",
@@ -67,6 +103,34 @@ RING = 16  # ring-buffer slots for in-flight (Tr, TTI) pairs
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Piecewise time-varying resource model (see module docstring).
+
+    period:     phase length in seconds; helper states re-randomize each
+                phase, so ``period`` sets the churn timescale.
+    n_phases:   distinct phases drawn; the schedule wraps (mod) beyond that.
+    p_down:     per-phase prob a helper is unavailable (its packets are lost).
+    p_slow:     per-phase prob a helper is degraded (mu_n / slowdown).
+    slowdown:   service-rate divisor while degraded.
+    drop_prob:  i.i.d. per-packet loss on top of outages.
+    max_backoff: cap on the Alg.-1 line-13 multiplicative TTI backoff so a
+                rejoining helper is re-probed within a bounded interval.
+    """
+
+    period: float = 5.0
+    n_phases: int = 16
+    p_down: float = 0.0
+    p_slow: float = 0.0
+    slowdown: float = 4.0
+    drop_prob: float = 0.0
+    max_backoff: float = 8.0
+
+    @property
+    def neutral(self) -> bool:
+        return self.p_down == 0.0 and self.p_slow == 0.0 and self.drop_prob == 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class ScenarioConfig:
     """Paper §6 simulation setup.
 
@@ -76,6 +140,8 @@ class ScenarioConfig:
     mu_choices: helper speeds drawn uniformly from this set.
     rate_lo/rate_hi: per-helper mean link rate bounds (bits/sec); per-packet
       rates are Poisson with that mean (in Mbps), floored at 0.5 Mbps.
+    churn: optional :class:`ChurnConfig`; None reproduces the paper's static
+      setup exactly.
     """
 
     N: int = 100
@@ -87,6 +153,7 @@ class ScenarioConfig:
     rate_hi: float = 20e6
     overhead: float = 0.05  # K = ceil(overhead * R)
     alpha: float = 0.25     # EWMA weight, eq. (4)
+    churn: Optional[ChurnConfig] = None
 
     def K(self, R: int) -> int:
         return int(np.ceil(self.overhead * R))
@@ -133,23 +200,57 @@ def draw_packet_tables(key, cfg: ScenarioConfig, mu, a, rate, M: int, R: int):
     return beta, d_up, d_ack, d_down
 
 
+def draw_dynamics(key, cfg: ScenarioConfig, M: int):
+    """Churn tables: drop (N, M) per-packet loss, up/speed (N, P) per-phase.
+
+    ``speed`` is the multiplicative service-rate factor (1 normal,
+    1/slowdown degraded); ``up`` False means the helper is unreachable."""
+    ch = cfg.churn
+    kd, ku, ks = jax.random.split(key, 3)
+    N, P = cfg.N, ch.n_phases
+    drop = jax.random.bernoulli(kd, ch.drop_prob, (N, M))
+    up = ~jax.random.bernoulli(ku, ch.p_down, (N, P))
+    slow = jax.random.bernoulli(ks, ch.p_slow, (N, P))
+    speed = jnp.where(slow, 1.0 / ch.slowdown, 1.0)
+    return dict(drop=drop, up=up, speed=speed)
+
+
 # ---------------------------------------------------------------------------
 # The per-helper timeline scan
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("mode", "cfg_static"))
-def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static):
-    """Simulate M packets on every helper. Returns dict of (N, M) arrays.
+def _phase_lookup(table, t, period: float):
+    """table (N, P) indexed by the wrapping phase of times t (N,)."""
+    P = table.shape[1]
+    ph = (jnp.floor_divide(t, period).astype(jnp.int32) % P)[:, None]
+    return jnp.take_along_axis(table, ph, axis=1)[:, 0]
 
-    mode: 'ccp'   — Algorithm 1 (estimated TTI, ring-buffer feedback delay)
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "cfg_static", "churn_static")
+)
+def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
+                    churn_static=None, dyn=None, a=None, naive_to=None):
+    """Simulate M packets on every helper. Returns dict of (N, M) arrays
+    (plus ``tx_end`` (N,): the send time of the first unsimulated packet).
+
+    mode: 'ccp'   — Algorithm 1 (estimated TTI, ring-buffer feedback delay,
+                    and — under churn — the l.13-14 timeout/backoff path)
           'best'  — oracle TTI_{n,i} = beta_{n,i} (paper's Best, eq. 13)
           'naive' — stop-and-wait: tx_{i+1} = Tr_i (paper's Naive, eq. 16)
     cfg_static: hashable (Bx, Br, Back, alpha) tuple.
+    churn_static: hashable (period, max_backoff) or None for the static
+        paper model.  When set, ``dyn`` (from :func:`draw_dynamics`), ``a``
+        (N,) runtime offsets, and — for 'naive' — ``naive_to`` (N,) fixed
+        retransmission timeouts must be provided.
     """
     Bx, Br, Back, alpha = cfg_static
     cfg = ccp_mod.CCPConfig(Bx=Bx, Br=Br, Back=Back, alpha=alpha)
     N, M = beta.shape
     state0 = ccp_mod.init_state(N)
+    churn = churn_static is not None
+    if churn:
+        period, max_backoff = churn_static
 
     carry0 = dict(
         tx=jnp.zeros(N),              # send time of current packet (Tx_{n,1}=0)
@@ -163,23 +264,45 @@ def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static):
         beta=beta.T, d_up=d_up.T, d_ack=d_ack.T, d_down=d_down.T,
         i=jnp.arange(M),
     )
+    if churn:
+        xs["drop"] = dyn["drop"].T
 
     def step(carry, x):
         tx = carry["tx"]
         arrive = tx + x["d_up"]
         start = jnp.maximum(arrive, carry["done_prev"])
-        done = start + x["beta"]
-        tr = done + x["d_down"]
-        idle = jnp.maximum(arrive - carry["done_prev"], 0.0)
+        if churn:
+            # Outage if the helper is down when the packet arrives or when
+            # it would start computing; degraded phases stretch the runtime
+            # (beta = a + eps/mu, so (beta-a)/speed rescales the random part).
+            is_up = (_phase_lookup(dyn["up"], arrive, period)
+                     & _phase_lookup(dyn["up"], start, period))
+            sp = _phase_lookup(dyn["speed"], start, period)
+            beta_i = jnp.where(sp == 1.0, x["beta"], a + (x["beta"] - a) / sp)
+            lost = x["drop"] | ~is_up
+        else:
+            beta_i = x["beta"]
+            lost = jnp.zeros((N,), bool)
+        received = ~lost
+        done_ok = start + beta_i
+        tr_ok = done_ok + x["d_down"]
+        # A lost packet never occupies the helper nor reaches the collector.
+        done = jnp.where(lost, carry["done_prev"], done_ok)
+        tr = jnp.where(lost, jnp.inf, tr_ok)
+        idle = jnp.where(
+            lost, 0.0, jnp.maximum(arrive - carry["done_prev"], 0.0)
+        )
         rtt_ack = x["d_up"] + x["d_ack"]
 
         if mode == "ccp":
             est, _tti_i = ccp_mod.on_computed(
-                carry["est"], cfg, tx, tr, carry["tr_prev"], rtt_ack,
-                active=jnp.ones((N,), bool),
+                carry["est"], cfg, tx, tr_ok, carry["tr_prev"], rtt_ack,
+                active=received,
             )
             slot = x["i"] % RING
-            ring_tr = carry["ring_tr"].at[:, slot].set(tr)
+            ring_tr = carry["ring_tr"].at[:, slot].set(
+                jnp.where(received, tr_ok, jnp.inf)
+            )
             ring_tti = carry["ring_tti"].at[:, slot].set(est.e_beta)
             # E[beta] estimate in effect when planning the next send: the
             # entry with the largest Tr among those with Tr <= tx (latest
@@ -189,46 +312,81 @@ def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static):
             sel = jnp.argmax(masked, axis=1)
             has = valid.any(axis=1)
             e_beta_sel = jnp.take_along_axis(ring_tti, sel[:, None], axis=1)[:, 0]
-            # eq. (8), causal form: tx_{i+1} = min(Tr_i, tx_i + E[beta]).
+            # eq. (8), causal form: tx_{i+1} = min(Tr_i, tx_i + E[beta]),
+            # scaled by the timeout backoff factor (1 when no timeouts).
             # Bootstrap: before any computed packet has returned by tx, the
             # collector has no estimate -> stop-and-wait on this packet.
-            tx_next = jnp.where(has, jnp.minimum(tr, tx + e_beta_sel), tr)
+            tti_est = e_beta_sel * est.tti_backoff
+            tx_next = jnp.where(has, jnp.minimum(tr_ok, tx + tti_est), tr_ok)
+            if churn:
+                # Alg. 1 lines 13-14 for a lost packet: the loss is detected
+                # when TO = 2*(TTI + RTT^data) elapses (``timeout_deadline``
+                # with the *pre-doubling* TTI), the stream resumes then, and
+                # the backoff doubles (capped) for the following sends.
+                # Consecutive losses therefore space out geometrically and a
+                # receipt (on_computed above) resets the backoff — so a
+                # helper that rejoins is re-ramped.  ``rtt_eff`` floors the
+                # RTT term with this packet's scaled ACK sample so helpers
+                # that never responded yet still have a finite deadline.
+                rtt_eff = jnp.maximum(est.rtt_data, cfg.data_scale * rtt_ack)
+                tti_pre = jnp.where(has, e_beta_sel, rtt_eff) * est.tti_backoff
+                deadline = ccp_mod.timeout_deadline(
+                    est.replace(rtt_data=rtt_eff), tti_pre
+                )
+                est = ccp_mod.on_timeout(est, lost, max_backoff=max_backoff)
+                tx_next = jnp.where(lost, tx + deadline, tx_next)
         elif mode == "best":
             est = carry["est"]
             ring_tr, ring_tti = carry["ring_tr"], carry["ring_tti"]
-            tx_next = tx + x["beta"]  # oracle: TTI_{n,i} = beta_{n,i}
+            tx_next = tx + beta_i  # oracle: TTI_{n,i} = beta_{n,i}
         elif mode == "naive":
             est = carry["est"]
             ring_tr, ring_tti = carry["ring_tr"], carry["ring_tti"]
-            tx_next = tr
+            tx_next = tr_ok
+            if churn:
+                # Stop-and-wait ARQ with a fixed (true-mean-based, i.e.
+                # generous) retransmission timeout.
+                tx_next = jnp.where(lost, tx + naive_to, tr_ok)
         else:
             raise ValueError(mode)
 
         new_carry = dict(
-            tx=tx_next, done_prev=done, tr_prev=tr, est=est,
-            ring_tr=ring_tr, ring_tti=ring_tti,
+            tx=tx_next, done_prev=done,
+            tr_prev=jnp.where(received, tr_ok, carry["tr_prev"]),
+            est=est, ring_tr=ring_tr, ring_tti=ring_tti,
         )
-        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive)
+        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive, beta=beta_i,
+                   lost=lost, backoff=est.tti_backoff)
         return new_carry, out
 
-    _, outs = jax.lax.scan(step, carry0, xs)
-    return {k: v.T for k, v in outs.items()}  # (N, M)
+    final, outs = jax.lax.scan(step, carry0, xs)
+    res = {k: v.T for k, v in outs.items()}  # (N, M)
+    res["tx_end"] = final["tx"]
+    return res
 
 
 # ---------------------------------------------------------------------------
 # Completion-time + efficiency extraction
 # ---------------------------------------------------------------------------
 
-def completion_time(tr: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def completion_time(tr: jnp.ndarray, k: int,
+                    tx_end: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Time when the k-th computed packet reaches the collector.
 
     Returns (T, valid): ``valid`` is False if the per-helper horizon M was too
     short to certify T (some helper might have contributed more packets by T
-    than were simulated) — caller should re-run with a larger M.
+    than were simulated) — caller should re-run with a larger M.  With
+    ``tx_end`` (the send time of the first unsimulated packet, which under
+    churn can be finite even when the last simulated Tr is inf) certification
+    uses "no helper would even have *sent* packet M+1 by T".
     """
     flat = jnp.sort(tr.reshape(-1))
     t = flat[k - 1]
-    valid = t <= jnp.min(tr[:, -1])
+    if tx_end is not None:
+        valid = jnp.isfinite(t) & (t <= jnp.min(tx_end))
+    else:
+        valid = t <= jnp.min(tr[:, -1])
     return t, valid
 
 
@@ -242,47 +400,109 @@ def efficiency_measured(tr, idle, beta, t_end) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Top-level runners (one Monte-Carlo rep each)
+# One Monte-Carlo rep (pure-jax core shared by the sequential and batched
+# runners)
 # ---------------------------------------------------------------------------
 
-def _horizon(cfg: ScenarioConfig, mu, a, R: int) -> int:
-    """Packets to simulate per helper: ~3x the fastest helper's fair share."""
-    k = R + cfg.K(R)
-    w = 1.0 / theory.shifted_exp_mean(np.asarray(a), np.asarray(mu))
-    share = float(w.max() / w.sum())
-    m = int(np.ceil(3.0 * k * share)) + 64
-    # Bucket to limit jit recompiles across the R sweep.
-    bucket = 1 << int(np.ceil(np.log2(max(m, 64))))
-    return min(bucket, k)
-
-
-def _run_mode(key, cfg: ScenarioConfig, R: int, mode: str) -> Dict[str, np.ndarray]:
+def _sim_one(key, cfg: ScenarioConfig, R: int, M: int, mode: str):
+    """Full single-rep pipeline as a traceable function of ``key``."""
     k_h, k_p = jax.random.split(key)
     mu, a, rate = draw_helpers(k_h, cfg)
-    kk = R + cfg.K(R)
-    M = _horizon(cfg, mu, a, R)
-    for _ in range(6):  # grow horizon until the order statistic is certified
-        beta, d_up, d_ack, d_down = draw_packet_tables(k_p, cfg, mu, a, rate, M, R)
-        c = cfg.ccp_cfg(R)
+    beta, d_up, d_ack, d_down = draw_packet_tables(k_p, cfg, mu, a, rate, M, R)
+    c = cfg.ccp_cfg(R)
+    cfg_static = (c.Bx, c.Br, c.Back, c.alpha)
+    if cfg.churn is None:
+        outs = simulate_stream(beta, d_up, d_ack, d_down, mode=mode,
+                               cfg_static=cfg_static)
+        tx_end = None
+    else:
+        k_c = jax.random.fold_in(key, 0xC0DE)
+        dyn = draw_dynamics(k_c, cfg, M)
+        # Naive has no estimator (eq. 16 stop-and-wait), so its ARQ timer is
+        # a *static* one provisioned for the slowest helper class — it cannot
+        # adapt to per-helper speed, which is exactly what it pays for under
+        # churn.
+        mu_min = min(cfg.mu_choices)
+        a_max = (cfg.a_const if cfg.a_mode == "const" else 1.0 / mu_min)
+        naive_to = 2.0 * ((a_max + 1.0 / mu_min) + (c.Bx + c.Br) / rate)
         outs = simulate_stream(
-            beta, d_up, d_ack, d_down, mode=mode,
-            cfg_static=(c.Bx, c.Br, c.Back, c.alpha),
+            beta, d_up, d_ack, d_down, mode=mode, cfg_static=cfg_static,
+            churn_static=(cfg.churn.period, cfg.churn.max_backoff),
+            dyn=dyn, a=a, naive_to=naive_to,
         )
-        t, valid = completion_time(outs["tr"], kk)
-        if bool(valid) or M >= kk:
-            break
-        M = min(M * 2, kk)
-    eff = efficiency_measured(outs["tr"], outs["idle"], beta, t)
+        tx_end = outs["tx_end"]
+    kk = R + cfg.K(R)
+    t, valid = completion_time(outs["tr"], kk, tx_end=tx_end)
+    eff = efficiency_measured(outs["tr"], outs["idle"], outs["beta"], t)
     r_n = (outs["tr"] <= t).sum(axis=1)
-    return dict(
-        T=float(t),
-        efficiency=np.asarray(eff),
-        r_n=np.asarray(r_n),
-        mu=np.asarray(mu),
-        a=np.asarray(a),
-        rate=np.asarray(rate),
-        M=M,
-    )
+    max_backoff = outs["backoff"].max(axis=1)
+    lost_frac = outs["lost"].mean(axis=1)
+    return dict(T=t, valid=valid, efficiency=eff, r_n=r_n, mu=mu, a=a,
+                rate=rate, max_backoff=max_backoff, lost_frac=lost_frac)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "mode"))
+def _sim_one_jit(key, cfg, R, M, mode):
+    return _sim_one(key, cfg, R, M, mode)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "mode"))
+def _sim_batch_jit(keys, cfg, R, M, mode):
+    return jax.vmap(lambda k: _sim_one(k, cfg, R, M, mode))(keys)
+
+
+def _m_cap(cfg: ScenarioConfig, kk: int) -> int:
+    # Static: every helper streams back-to-back, so M = R+K always certifies.
+    # Under churn a helper's M packets can include losses — leave headroom.
+    return kk if cfg.churn is None else 4 * kk
+
+
+def _bucketed_horizon(cfg: ScenarioConfig, share: float, k: int) -> int:
+    """~3x the fastest helper's fair share, bucketed to a power of two to
+    limit jit recompiles across the R sweep, capped at _m_cap."""
+    m = int(np.ceil(3.0 * k * share)) + 64
+    bucket = 1 << int(np.ceil(np.log2(max(m, 64))))
+    return min(bucket, _m_cap(cfg, k))
+
+
+def _horizon(cfg: ScenarioConfig, mu, a, R: int) -> int:
+    """Per-draw horizon for the sequential runner."""
+    k = R + cfg.K(R)
+    w = 1.0 / theory.shifted_exp_mean(np.asarray(a), np.asarray(mu))
+    return _bucketed_horizon(cfg, float(w.max() / w.sum()), k)
+
+
+def _horizon_shared(cfg: ScenarioConfig, R: int) -> int:
+    """Key-independent horizon for the batched runner: the expected fastest
+    helper's share from the mu/a choice set (certification re-runs with a
+    doubled horizon when a draw lands above it)."""
+    k = R + cfg.K(R)
+    mu = np.asarray(cfg.mu_choices, dtype=np.float64)
+    a = 1.0 / mu if cfg.a_mode == "inv_mu" else np.full_like(mu, cfg.a_const)
+    w = 1.0 / theory.shifted_exp_mean(a, mu)
+    return _bucketed_horizon(cfg, float(w.max() / (cfg.N * w.mean())), k)
+
+
+# ---------------------------------------------------------------------------
+# Top-level runners
+# ---------------------------------------------------------------------------
+
+def _run_mode(key, cfg: ScenarioConfig, R: int, mode: str,
+              M_override: Optional[int] = None) -> Dict[str, np.ndarray]:
+    k_h, _ = jax.random.split(key)
+    mu, a, _rate = draw_helpers(k_h, cfg)
+    kk = R + cfg.K(R)
+    cap = _m_cap(cfg, kk)
+    M = M_override if M_override is not None else _horizon(cfg, mu, a, R)
+    for _ in range(8):  # grow horizon until the order statistic is certified
+        out = _sim_one_jit(key, cfg, R, M, mode)
+        if bool(out["valid"]) or M >= cap or M_override is not None:
+            break
+        M = min(M * 2, cap)
+    res = {k: np.asarray(v) for k, v in out.items()}
+    res["T"] = float(res["T"])
+    res["M"] = M
+    return res
 
 
 def run_ccp(key, cfg: ScenarioConfig, R: int):
@@ -295,3 +515,31 @@ def run_best(key, cfg: ScenarioConfig, R: int):
 
 def run_naive(key, cfg: ScenarioConfig, R: int):
     return _run_mode(key, cfg, R, "naive")
+
+
+def batch_keys(reps: int, seed0: int = 0) -> jnp.ndarray:
+    """The batched counterpart of ``PRNGKey(seed0 * 100003 + r)`` per rep."""
+    return jax.vmap(jax.random.PRNGKey)(seed0 * 100003 + jnp.arange(reps))
+
+
+def run_batch(keys, cfg: ScenarioConfig, R: int, mode: str,
+              M_override: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Vmapped Monte-Carlo over a batch of PRNG keys (see module docstring).
+
+    Returns a dict of stacked arrays: T (B,), valid (B,), efficiency (B, N),
+    r_n, mu, a, rate, max_backoff, lost_frac (B, N), plus the shared horizon
+    M actually used.  All reps share one bucketed horizon; if any rep's
+    completion time is uncertified the horizon doubles and the batch re-runs.
+    """
+    keys = jnp.asarray(keys)
+    kk = R + cfg.K(R)
+    cap = _m_cap(cfg, kk)
+    M = M_override if M_override is not None else _horizon_shared(cfg, R)
+    for _ in range(8):
+        out = _sim_batch_jit(keys, cfg, R, M, mode)
+        if bool(out["valid"].all()) or M >= cap or M_override is not None:
+            break
+        M = min(M * 2, cap)
+    res = {k: np.asarray(v) for k, v in out.items()}
+    res["M"] = M
+    return res

@@ -137,7 +137,9 @@ def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
             axes = ["data"]
     elif "data" in names and _div(batch, names["data"]):
         axes = ["data"]
-    first = tuple(axes) if axes else None
+    # Normalize: a single mesh axis is a bare name, multiple axes a tuple —
+    # consumers index bspec[0] and expect the bare-name form for one axis.
+    first = None if not axes else axes[0] if len(axes) == 1 else tuple(axes)
     return P(first, *([None] * extra_dims))
 
 

@@ -1,0 +1,176 @@
+"""Minimal offline stand-in for the ``hypothesis`` subset this suite uses.
+
+The CI container has no network and no ``hypothesis`` wheel; the property
+tests only need ``given`` / ``settings`` / ``assume`` and the ``integers`` /
+``floats`` / ``sampled_from`` / ``data`` strategies.  This shim replays each
+property over ``max_examples`` *deterministic* seeded draws (seeded from the
+test's qualified name), so failures are reproducible run-to-run.  It is NOT a
+property-based testing engine: no shrinking, no coverage-guided generation —
+just an exhaustive-enough deterministic sweep that keeps the invariants
+exercised offline.  ``tests/conftest.py`` installs it into ``sys.modules``
+only when the real ``hypothesis`` cannot be imported.
+"""
+
+from __future__ import annotations
+
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Skip the current example when ``condition`` is falsy."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    def do_draw(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def do_draw(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def do_draw(self, rng):
+        # Hit the endpoints occasionally: boundary values find most bugs.
+        edge = rng.integers(0, 8)
+        if edge == 0:
+            return self.lo
+        if edge == 1:
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def do_draw(self, rng):
+        return self.elements[int(rng.integers(0, len(self.elements)))]
+
+
+class _Data(SearchStrategy):
+    """Marker; resolved to a DataObject bound to the example's rng."""
+
+
+class DataObject:
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.do_draw(self._rng)
+
+
+def integers(min_value=0, max_value=2**31 - 1) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def data() -> SearchStrategy:
+    return _Data()
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, sampled_from=sampled_from, data=data
+)
+strategies.__name__ = "hypothesis.strategies"
+
+
+class HealthCheck:
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records ``max_examples``; deadline/suppress_health_check are no-ops."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError(
+            "the hypothesis compat shim supports keyword strategies only"
+        )
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            ran = 0
+            # Extra attempts absorb assume() rejections.
+            for example in range(n * 10):
+                if ran >= n:
+                    break
+                rng = np.random.default_rng([seed, example])
+                drawn = {
+                    name: DataObject(rng) if isinstance(s, _Data)
+                    else s.do_draw(rng)
+                    for name, s in kw_strategies.items()
+                }
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise RuntimeError(
+                    f"{fn.__qualname__}: assume() rejected every example"
+                )
+
+        # Pytest must not treat the strategy-supplied params as fixtures:
+        # expose a signature with only the remaining (fixture) parameters.
+        # Deliberately no functools.wraps: __wrapped__ would leak the
+        # original signature through pytest's unwrapping.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in kw_strategies
+            ]
+        )
+        wrapper._compat_max_examples = getattr(
+            fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES
+        )
+        return wrapper
+
+    return deco

@@ -1,0 +1,28 @@
+"""Suite-level setup.
+
+* Puts ``src/`` on ``sys.path`` so the suite runs without PYTHONPATH=src.
+* Installs the vendored deterministic hypothesis shim
+  (``tests/_hypothesis_compat.py``) when the real ``hypothesis`` is absent —
+  the CI container has no network, so the property-test modules must collect
+  offline.
+"""
+
+import importlib.util
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_SRC = str(_ROOT / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", pathlib.Path(__file__).parent / "_hypothesis_compat.py"
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

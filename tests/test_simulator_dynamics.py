@@ -1,0 +1,198 @@
+"""Dynamics engine tests: the vmapped batch runner and the churn model.
+
+Covers the three contract points of the batched Monte-Carlo engine:
+  (a) run_batch over vmapped keys == per-key sequential _run_mode,
+  (b) a helper that dies mid-task gets exponentially backed-off TTI
+      (Alg. 1 line 13) and the task completes from the survivors,
+  (c) a zero-churn ChurnConfig reproduces the static paper model
+      bit-for-bit (the dynamics machinery is numerically invisible
+      when its knobs are neutral).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simulator
+
+
+CFG = simulator.ScenarioConfig(N=20, scenario=1)
+R = 400
+
+
+# ---------------------------------------------------------------------------
+# (a) batch == sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["ccp", "best", "naive"])
+def test_run_batch_matches_sequential(mode):
+    reps = 4
+    keys = simulator.batch_keys(reps)
+    batch = simulator.run_batch(keys, CFG, R, mode)
+    for r in range(reps):
+        # batch_keys(reps, seed0=0)[r] == PRNGKey(r)
+        seq = simulator._run_mode(jax.random.PRNGKey(r), CFG, R, mode,
+                                  M_override=batch["M"])
+        np.testing.assert_allclose(batch["T"][r], seq["T"], rtol=1e-6)
+        np.testing.assert_array_equal(batch["r_n"][r], seq["r_n"])
+        np.testing.assert_allclose(
+            batch["efficiency"][r], seq["efficiency"], rtol=1e-5
+        )
+
+
+def test_run_batch_matches_sequential_under_churn():
+    cfg = simulator.ScenarioConfig(
+        N=20, scenario=1,
+        churn=simulator.ChurnConfig(period=5.0, p_down=0.1, p_slow=0.2,
+                                    drop_prob=0.05),
+    )
+    keys = simulator.batch_keys(3)
+    batch = simulator.run_batch(keys, cfg, R, "ccp")
+    for r in range(3):
+        seq = simulator._run_mode(jax.random.PRNGKey(r), cfg, R, "ccp",
+                                  M_override=batch["M"])
+        np.testing.assert_allclose(batch["T"][r], seq["T"], rtol=1e-6)
+        np.testing.assert_array_equal(batch["r_n"][r], seq["r_n"])
+
+
+# ---------------------------------------------------------------------------
+# (b) mid-task death -> exponential backoff, completion from survivors
+# ---------------------------------------------------------------------------
+
+def test_dead_helper_backs_off_and_task_completes():
+    """Helper 0 is up in phase 0 only, then down for good (period=4s).  Its
+    TTI backoff must double per timeout up to the cap (Alg. 1 l.13) while the
+    survivors keep streaming at backoff 1, and the (R+K)-th order statistic
+    must still be reached from the survivors alone."""
+    N, M, period, cap = 3, 64, 4.0, 8.0
+    beta = jnp.full((N, M), 1.0)
+    d_up = jnp.full((N, M), 0.01)
+    d_ack = jnp.full((N, M), 0.001)
+    d_down = jnp.full((N, M), 0.01)
+    # The phase schedule wraps after n_phases*period seconds (rejoin is the
+    # wrap's purpose — tested below); here the death must be final, so make
+    # the wrap horizon far exceed the backed-off probe span (~M*2*cap*beta).
+    n_phases = 512
+    up = jnp.ones((N, n_phases), bool).at[0, 1:].set(False)
+    dyn = dict(
+        drop=jnp.zeros((N, M), bool),
+        up=up,
+        speed=jnp.ones((N, n_phases)),
+    )
+    a = jnp.full((N,), 0.5)
+    outs = simulator.simulate_stream(
+        beta, d_up, d_ack, d_down, mode="ccp",
+        cfg_static=(8.0 * R, 8.0, 1.0, 0.25),
+        churn_static=(period, cap), dyn=dyn, a=a,
+    )
+    backoff = np.asarray(outs["backoff"])
+    lost = np.asarray(outs["lost"])
+    # helper 0 died after phase 0: all its packets sent after t=4 are lost
+    assert lost[0].sum() > 0
+    assert lost[1:].sum() == 0
+    # exponential backoff: doubles per timeout, monotone once dead, capped
+    b0 = backoff[0][lost[0]]
+    assert b0.max() == cap
+    assert (np.diff(b0) >= 0).all()
+    ratios = b0[1:] / b0[:-1]
+    assert set(np.unique(ratios)).issubset({1.0, 2.0})
+    # survivors never back off
+    assert (backoff[1:] == 1.0).all()
+    # completion still certified from the survivors: ask for k results with
+    # k far below what two healthy helpers produce over the horizon
+    k = 40
+    t, valid = simulator.completion_time(
+        jnp.asarray(outs["tr"]), k, tx_end=jnp.asarray(outs["tx_end"])
+    )
+    assert bool(valid)
+    assert np.isfinite(float(t))
+    # and the dead helper's timeout probes are spaced at least as far apart
+    # as the survivors' (backed-off TTI), never tighter
+    tx0 = np.asarray(outs["tx"])[0]
+    gaps = np.diff(tx0[np.asarray(lost[0])])
+    assert gaps.min() > 0
+
+
+def test_rejoining_helper_backoff_resets():
+    """Down for phases 1-2, back up in phase 3+: after rejoin the first
+    receipt resets the backoff to 1 and the helper contributes again."""
+    N, M, period, cap = 2, 96, 3.0, 8.0
+    beta = jnp.full((N, M), 0.5)
+    d_up = jnp.full((N, M), 0.01)
+    d_ack = jnp.full((N, M), 0.001)
+    d_down = jnp.full((N, M), 0.01)
+    n_phases = 16
+    up = jnp.ones((N, n_phases), bool).at[0, 1:3].set(False)
+    dyn = dict(drop=jnp.zeros((N, M), bool), up=up,
+               speed=jnp.ones((N, n_phases)))
+    outs = simulator.simulate_stream(
+        beta, d_up, d_ack, d_down, mode="ccp",
+        cfg_static=(8.0 * R, 8.0, 1.0, 0.25),
+        churn_static=(period, cap), dyn=dyn, a=jnp.full((N,), 0.25),
+    )
+    lost0 = np.asarray(outs["lost"])[0]
+    backoff0 = np.asarray(outs["backoff"])[0]
+    assert lost0.sum() > 0, "helper 0 must have lost packets while down"
+    last_lost = np.nonzero(lost0)[0].max()
+    assert not lost0[last_lost + 1:].any(), "helper 0 must rejoin"
+    assert backoff0[lost0].max() > 1.0, "timeouts must have backed off"
+    # after the first post-rejoin receipt the backoff is 1 again
+    assert (backoff0[last_lost + 1:] == 1.0).all()
+
+
+def test_slowdown_phases_increase_completion_time():
+    base = simulator.ScenarioConfig(
+        N=20, scenario=1,
+        churn=simulator.ChurnConfig(period=5.0, p_slow=0.0, slowdown=4.0),
+    )
+    slowed = simulator.ScenarioConfig(
+        N=20, scenario=1,
+        churn=simulator.ChurnConfig(period=5.0, p_slow=0.8, slowdown=4.0),
+    )
+    keys = simulator.batch_keys(4)
+    t_base = simulator.run_batch(keys, base, R, "ccp")["T"].mean()
+    t_slow = simulator.run_batch(keys, slowed, R, "ccp")["T"].mean()
+    assert t_slow > 1.5 * t_base
+
+
+def test_ccp_degrades_gracefully_vs_naive():
+    """Small-scale fig_churn anchor: under loss-heavy churn on heterogeneous
+    helpers, Naive's statically-provisioned ARQ timer costs it a far larger
+    slowdown than CCP's adapted timeout."""
+    cfg = simulator.ScenarioConfig(
+        N=20, scenario=1, mu_choices=(1.0, 3.0, 9.0), a_mode="inv_mu",
+        rate_lo=1e6, rate_hi=2e6,
+        churn=simulator.ChurnConfig(period=10.0, p_down=0.05, p_slow=0.1,
+                                    drop_prob=0.2, max_backoff=8.0),
+    )
+    keys = simulator.batch_keys(6)
+    t_ccp = simulator.run_batch(keys, cfg, 300, "ccp")["T"].mean()
+    t_best = simulator.run_batch(keys, cfg, 300, "best")["T"].mean()
+    t_naive = simulator.run_batch(keys, cfg, 300, "naive")["T"].mean()
+    assert t_ccp < t_naive, "CCP must beat Naive under churn"
+    assert (t_ccp / t_best) < 0.6 * (t_naive / t_best), \
+        "CCP's degradation vs Best must be far milder than Naive's"
+
+
+# ---------------------------------------------------------------------------
+# (c) zero-churn == static, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["ccp", "best", "naive"])
+def test_neutral_churn_is_bit_for_bit_static(mode):
+    static = CFG
+    neutral = simulator.ScenarioConfig(
+        N=20, scenario=1,
+        churn=simulator.ChurnConfig(p_down=0.0, p_slow=0.0, drop_prob=0.0),
+    )
+    assert neutral.churn.neutral
+    key = jax.random.PRNGKey(7)
+    M = 128
+    s = simulator._run_mode(key, static, R, mode, M_override=M)
+    n = simulator._run_mode(key, neutral, R, mode, M_override=M)
+    np.testing.assert_array_equal(np.float32(s["T"]), np.float32(n["T"]))
+    np.testing.assert_array_equal(s["r_n"], n["r_n"])
+    np.testing.assert_array_equal(s["efficiency"], n["efficiency"])
+    assert (n["lost_frac"] == 0).all()
+    assert (n["max_backoff"] == 1.0).all()
