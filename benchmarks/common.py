@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 from typing import Callable, Dict, List
@@ -10,7 +11,14 @@ from typing import Callable, Dict, List
 import jax
 import numpy as np
 
-OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
+# BENCH_OUT_DIR overrides the artifact directory (the smoke-test lane points
+# it at a tmpdir so tiny-scale runs never clobber the committed artifacts).
+OUT_DIR = pathlib.Path(
+    os.environ.get(
+        "BENCH_OUT_DIR",
+        pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench",
+    )
+)
 
 
 def _stats(a: np.ndarray) -> Dict[str, float]:
@@ -21,36 +29,61 @@ def _stats(a: np.ndarray) -> Dict[str, float]:
 def mc(fn: Callable, cfg, R: int, reps: int, seed0: int = 0) -> Dict[str, float]:
     """Sequential Monte-Carlo mean/std of fn(key, cfg, R)["T"] over ``reps``
     draws.  Used for the numpy-driven baselines (uncoded/HCMM); the simulator
-    modes go through the vmapped :func:`mc_sim` instead."""
+    modes go through the vmapped :func:`mc_sim` instead.  Keys come from the
+    same fold_in schedule as :func:`mc_sim`, so baseline and simulator rows
+    in one figure share helper draws rep-for-rep."""
+    from repro.core import simulator
+
+    keys = simulator.batch_keys(reps, seed0)
     ts = []
     for r in range(reps):
-        ts.append(fn(jax.random.PRNGKey(seed0 * 100003 + r), cfg, R)["T"])
+        ts.append(fn(keys[r], cfg, R)["T"])
     return _stats(np.asarray(ts))
 
 
-def mc_sim(cfg, R: int, reps: int, mode: str, seed0: int = 0) -> Dict[str, float]:
+def certified(out: Dict, label: str) -> np.ndarray:
+    """The certification mask of a ``run_batch`` result, as the one shared
+    drop-the-invalid-reps gate: raises when *no* rep is certified (horizon
+    cap hit for the whole batch), otherwise returns the boolean mask the
+    caller must apply before aggregating (counting ``~mask`` as invalid)."""
+    valid = np.asarray(out["valid"])
+    if not valid.any():
+        raise RuntimeError(
+            f"{label}: no certified rep at horizon cap (M={out['M']}) — "
+            "churn config too hostile?"
+        )
+    return valid
+
+
+def mc_sim(cfg, R: int, reps: int, mode: str, seed0: int = 0,
+           shard: bool = False) -> Dict[str, float]:
     """Batched Monte-Carlo over ``reps`` vmapped keys via simulator.run_batch
     (one compile + one device call instead of ``reps`` sequential runs).
     Uncertified reps (horizon cap hit under heavy churn -> T possibly inf or
-    understated) are excluded from the stats and counted in ``invalid``."""
+    understated) are excluded from the stats and counted in ``invalid``.
+    ``shard=True`` splits the key batch over the local devices."""
     from repro.core import simulator
 
-    out = simulator.run_batch(simulator.batch_keys(reps, seed0), cfg, R, mode)
-    t, valid = np.asarray(out["T"]), np.asarray(out["valid"])
-    if not valid.any():
-        raise RuntimeError(
-            f"mc_sim: no certified rep at horizon cap (M={out['M']}) for "
-            f"mode={mode!r}, R={R} — churn config too hostile?"
-        )
-    stats = _stats(t[valid])
+    out = simulator.run_batch(simulator.batch_keys(reps, seed0), cfg, R, mode,
+                              shard=shard)
+    valid = certified(out, f"mc_sim mode={mode!r} R={R}")
+    stats = _stats(np.asarray(out["T"])[valid])
     stats["invalid"] = int((~valid).sum())
     return stats
 
 
 def emit(name: str, rows: List[dict], derived: str = "") -> None:
-    """Write JSON artifact + the harness CSV line ``name,us_per_call,derived``."""
+    """Write JSON artifact + the harness CSV line ``name,us_per_call,derived``.
+
+    The artifact is ``{"meta": {...}, "data": rows}``: ``meta`` records the
+    PRNG key schedule (PR 2 switched batch_keys from the collision-prone
+    ``seed0*100003 + r`` arithmetic to ``fold_in``) so numbers from
+    different schedules are never compared silently."""
+    from repro.core import simulator
+
     OUT_DIR.mkdir(parents=True, exist_ok=True)
-    (OUT_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1))
+    doc = {"meta": {"key_schedule": simulator.KEY_SCHEDULE}, "data": rows}
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(doc, indent=1))
     print(f"{name},-,{derived}")
 
 

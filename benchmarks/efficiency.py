@@ -12,23 +12,26 @@ import numpy as np
 from repro.configs.ccp_paper import EFFICIENCY, FIG4
 from repro.core import simulator, theory
 
-from .common import emit
+from .common import certified, emit
 
 
-def run(reps: int = 20, R: int = 8000) -> dict:
+def run(reps: int = 20, R: int = 8000, shard: bool = False) -> dict:
     rows = []
     keys = simulator.batch_keys(reps)
     for sc in (1, 2):
         cfg = FIG4[sc]
-        out = simulator.run_batch(keys, cfg, R, "ccp")
-        eff = float(np.nanmean(out["efficiency"]))
-        rtt = (8.0 * R + 8.0) / out["rate"]
+        out = simulator.run_batch(keys, cfg, R, "ccp", shard=shard)
+        valid = certified(out, "efficiency")
+        eff = float(np.nanmean(out["efficiency"][valid]))
+        rtt = (8.0 * R + 8.0) / out["rate"][valid]
         theo = float(np.mean(theory.efficiency(
-            rtt.reshape(-1), out["a"].reshape(-1), out["mu"].reshape(-1))))
+            rtt.reshape(-1), out["a"][valid].reshape(-1),
+            out["mu"][valid].reshape(-1))))
         rows.append({
             "scenario": sc,
             "measured": eff,
             "theory_eq12": theo,
+            "invalid": int((~valid).sum()),
         })
     emit("efficiency", rows,
          derived=";".join(

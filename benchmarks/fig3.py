@@ -17,15 +17,16 @@ from repro.core import baselines, simulator, theory
 from .common import emit, mc, mc_sim
 
 
-def run(reps: int = 40, r_sweep=(1000, 2000, 4000, 8000)) -> dict:
+def run(reps: int = 40, r_sweep=(1000, 2000, 4000, 8000),
+        shard: bool = False) -> dict:
     rows = []
     summary = {}
     for sc, cfg in FIG3.items():
         for R in r_sweep:
             K = cfg.K(R)
             row = {"scenario": sc, "R": R}
-            row["ccp"] = mc_sim(cfg, R, reps, "ccp")
-            row["best"] = mc_sim(cfg, R, reps, "best")
+            row["ccp"] = mc_sim(cfg, R, reps, "ccp", shard=shard)
+            row["best"] = mc_sim(cfg, R, reps, "best", shard=shard)
             row["uncoded_mean"] = mc(
                 lambda k, c, r: baselines.run_uncoded(k, c, r, rule="mean"),
                 cfg, R, reps)

@@ -10,13 +10,14 @@ from repro.configs.ccp_paper import FIG5
 from .common import emit, mc_sim
 
 
-def run(reps: int = 30, r_sweep=(200, 400, 800, 1600)) -> dict:
+def run(reps: int = 30, r_sweep=(200, 400, 800, 1600),
+        shard: bool = False) -> dict:
     rows = []
     for R in r_sweep:
         row = {"R": R}
-        row["ccp"] = mc_sim(FIG5, R, reps, "ccp")
-        row["best"] = mc_sim(FIG5, R, reps, "best")
-        row["naive"] = mc_sim(FIG5, R, reps, "naive")
+        row["ccp"] = mc_sim(FIG5, R, reps, "ccp", shard=shard)
+        row["best"] = mc_sim(FIG5, R, reps, "best", shard=shard)
+        row["naive"] = mc_sim(FIG5, R, reps, "naive", shard=shard)
         row["gap_naive"] = row["naive"]["mean"] - row["ccp"]["mean"]
         row["gap_best"] = row["ccp"]["mean"] - row["best"]["mean"]
         rows.append(row)

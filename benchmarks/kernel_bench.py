@@ -97,7 +97,7 @@ def run() -> dict:
         batched = simulator.run_batch(keys, cfg, R, "ccp")
         t_batch = time.perf_counter() - t0
         t0 = time.perf_counter()
-        seq_t = [simulator.run_ccp(jax.random.PRNGKey(r), cfg, R)["T"]
+        seq_t = [simulator.run_ccp(keys[r], cfg, R)["T"]
                  for r in range(reps)]
         t_seq = time.perf_counter() - t0
         speedups[tag] = t_seq / max(t_batch, 1e-9)
@@ -110,11 +110,36 @@ def run() -> dict:
                                    - float(np.mean(seq_t))),
         })
 
+    # --- device-sharded vs single-device batched MC ------------------------
+    # On the 1-device CI box this measures shard_map overhead (~1x); on a
+    # real mesh it is the raw-parallelism win ROADMAP asked for.  Results
+    # must be bitwise identical either way (per-rep lanes are independent).
+    cfg, R, reps = simulator.ScenarioConfig(N=100, scenario=1), 2000, 40
+    keys = simulator.batch_keys(reps)
+    un = simulator.run_batch(keys, cfg, R, "ccp")
+    sh = simulator.run_batch(keys, cfg, R, "ccp", shard=True)
+    t0 = time.perf_counter()
+    un = simulator.run_batch(keys, cfg, R, "ccp")
+    t_un = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sh = simulator.run_batch(keys, cfg, R, "ccp", shard=True)
+    t_sh = time.perf_counter() - t0
+    shard_eq = bool(np.array_equal(un["T"], sh["T"]))
+    shard_speedup = t_un / max(t_sh, 1e-9)
+    rows.append({
+        "kernel": "mc_batch_shard", "devices": jax.local_device_count(),
+        "reps": reps, "R": R, "t_unsharded_s": t_un, "t_sharded_s": t_sh,
+        "speedup": shard_speedup, "bitwise_equal": shard_eq,
+    })
+
     emit("kernel_bench", rows,
          derived=f"coded_matmul_max_err={max_err:.2e};"
                  + ";".join(f"mc_batch_speedup_{k}={v:.1f}x"
-                            for k, v in speedups.items()))
-    return {"rows": rows, "max_err": max_err, "mc_batch_speedups": speedups}
+                            for k, v in speedups.items())
+                 + f";mc_shard_speedup={shard_speedup:.2f}x"
+                 + f";mc_shard_bitwise_equal={shard_eq}")
+    return {"rows": rows, "max_err": max_err, "mc_batch_speedups": speedups,
+            "mc_shard_speedup": shard_speedup, "mc_shard_equal": shard_eq}
 
 
 if __name__ == "__main__":

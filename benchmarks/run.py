@@ -6,7 +6,8 @@ simulation benchmarks whose deliverable is the derived statistics).
   fig3        — delay vs rows, Scenarios 1/2 (paper Fig. 3)
   fig4        — delay vs rows, mu in {1,3,9} (paper Fig. 4)
   fig5        — CCP vs best/naive gaps on slow links (paper Fig. 5)
-  fig_churn   — delay/efficiency under churn + loss (beyond-paper, §1 claim)
+  fig_churn   — delay/efficiency under i.i.d./burst/cell-outage churn
+                (beyond-paper, §1 claim; includes naive+oracle-timer)
   efficiency  — measured vs eq.(12) efficiency (paper §6 table)
   overhead    — fountain codec failure prob + O(R) timing (paper §2 claims)
   kernel      — Pallas hot-spot roofline accounting + batched-MC speedup
@@ -15,6 +16,8 @@ simulation benchmarks whose deliverable is the derived statistics).
 Run everything:  PYTHONPATH=src python -m benchmarks.run
 Subset:          PYTHONPATH=src python -m benchmarks.run --only fig3,fig5
 Fast smoke:      PYTHONPATH=src python -m benchmarks.run --fast
+Test-lane smoke: PYTHONPATH=src python -m benchmarks.run --smoke --only fig_churn
+Device-sharded:  PYTHONPATH=src python -m benchmarks.run --shard --reps 64
 """
 
 from __future__ import annotations
@@ -25,30 +28,62 @@ import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
     ap.add_argument("--fast", action="store_true",
                     help="reduced rep counts (CI smoke)")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal scale — the fast '-m \"not slow\"' test "
+                         "lane runs this; implies tiny sweeps")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="override the Monte-Carlo rep count per point")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard MC key batches over the local devices "
+                         "(simulator.run_batch(shard=True))")
+    args = ap.parse_args(argv)
 
     from . import (efficiency, fig3, fig4, fig5, fig_churn, kernel_bench,
                    overhead, roofline_report)
 
-    reps = 8 if args.fast else 40
-    sweep = (500, 1000) if args.fast else (1000, 2000, 4000, 8000)
+    reps_explicit = args.reps is not None
+    reps = args.reps if reps_explicit else (
+        2 if args.smoke else (8 if args.fast else 40))
+    shard = args.shard
+    if args.smoke:
+        sweep = (500,)
+        churn_kw = dict(
+            sweeps={name: ((axis[0], axis[-1]), mk, ax_name)
+                    for name, (axis, mk, ax_name) in fig_churn.SWEEPS.items()},
+            R=200, n_helpers=20,
+        )
+    elif args.fast:
+        sweep = (500, 1000)
+        churn_kw = dict(
+            sweeps={name: ((axis[0], axis[2]), mk, ax_name)
+                    for name, (axis, mk, ax_name) in fig_churn.SWEEPS.items()},
+        )
+    else:
+        sweep = (1000, 2000, 4000, 8000)
+        churn_kw = {}
+    small = args.fast or args.smoke
+    # An explicit --reps is honored verbatim everywhere; the per-figure
+    # scaling below only applies to the lane defaults.
+    fig5_reps = reps if reps_explicit else max(reps // 2, 2 if small else 5)
+    eff_reps = reps if reps_explicit else (min(reps, 4) if small else 20)
     jobs = {
-        "fig3": lambda: fig3.run(reps=reps, r_sweep=sweep),
-        "fig4": lambda: fig4.run(reps=reps, r_sweep=sweep),
-        "fig5": lambda: fig5.run(reps=max(reps // 2, 5),
-                                 r_sweep=(200, 400) if args.fast
-                                 else (200, 400, 800, 1600)),
-        "fig_churn": lambda: fig_churn.run(
-            reps=reps,
-            drop_sweep=(0.0, 0.1, 0.3) if args.fast else fig_churn.DROP_SWEEP),
-        "efficiency": lambda: efficiency.run(reps=4 if args.fast else 20,
-                                             R=2000 if args.fast else 8000),
+        "fig3": lambda: fig3.run(reps=reps, r_sweep=sweep, shard=shard),
+        "fig4": lambda: fig4.run(reps=reps, r_sweep=sweep, shard=shard),
+        "fig5": lambda: fig5.run(reps=fig5_reps,
+                                 r_sweep=(200, 400) if small
+                                 else (200, 400, 800, 1600), shard=shard),
+        "fig_churn": lambda: fig_churn.run(reps=reps, shard=shard,
+                                           **churn_kw),
+        "efficiency": lambda: efficiency.run(
+            reps=eff_reps,
+            R=400 if args.smoke else (2000 if args.fast else 8000),
+            shard=shard),
         "overhead": overhead.run,
         "kernel": kernel_bench.run,
         "roofline": roofline_report.run,

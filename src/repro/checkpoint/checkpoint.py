@@ -173,6 +173,20 @@ def restore(
         meta = msgpack.unpackb(f.read())
     index = meta["leaves"]
     codec = meta.get("codec", "zstd")  # pre-codec checkpoints were zstd-only
+    # Fail up front with one actionable error when the recorded codec is not
+    # decodable in this environment — not a per-leaf decode traceback.
+    if codec == "zstd" and zstandard is None:
+        raise RuntimeError(
+            f"checkpoint {d} was written with the 'zstd' codec but the "
+            "'zstandard' module is not installed in this environment; "
+            "install the zstandard wheel or re-save the checkpoint from a "
+            "build using the zlib codec"
+        )
+    if codec not in _CODEC_SUFFIX:
+        raise RuntimeError(
+            f"checkpoint {d} records unknown codec {codec!r}; this build "
+            f"supports {sorted(_CODEC_SUFFIX)}"
+        )
 
     leaves_t, treedef = jax.tree_util.tree_flatten(target)
     flat_target = _flatten(target)
@@ -183,7 +197,16 @@ def restore(
         if entry is None:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         with open(d / entry["file"], "rb") as f:
-            raw = _decompress(f.read(), codec, entry["raw_bytes"])
+            payload = f.read()
+        try:
+            raw = _decompress(payload, codec, entry["raw_bytes"])
+        except Exception as e:
+            raise RuntimeError(
+                f"checkpoint leaf {key!r} ({d / entry['file']}) failed to "
+                f"decode with the index-recorded codec {codec!r}: {e} — the "
+                "file is corrupt or was written by a build with a different "
+                "codec"
+            ) from None
         arr = np.frombuffer(raw, dtype=_np_dtype(entry["dtype"])).reshape(entry["shape"])
         exp_shape = tuple(tgt.shape)
         if tuple(arr.shape) != exp_shape:

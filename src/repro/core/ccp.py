@@ -33,7 +33,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CCPConfig", "CCPState", "init_state", "on_computed", "on_timeout", "tti"]
+__all__ = ["CCPConfig", "CCPState", "init_state", "on_computed", "on_timeout",
+           "tti", "timeout_deadline", "arq_timeout"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,3 +159,11 @@ def tti(state: CCPState, tr_minus_tx: jnp.ndarray) -> jnp.ndarray:
 def timeout_deadline(state: CCPState, tti_cur: jnp.ndarray) -> jnp.ndarray:
     """Alg. 1 line 14: TO = 2 * (TTI + RTT^data)."""
     return 2.0 * (tti_cur + state.rtt_data)
+
+
+def arq_timeout(beta_mean, rtt_data) -> jnp.ndarray:
+    """Alg.-1-line-14-shaped retransmission timeout for estimator-free
+    stop-and-wait baselines: TO = 2 * (E[beta] + RTT^data), with E[beta]
+    supplied externally (worst-case class for the paper's Naive, the true
+    per-helper mean for the oracle-timer variant) instead of eq. (5)."""
+    return 2.0 * (beta_mean + rtt_data)

@@ -35,18 +35,49 @@ Timing model per packet (helper n, packet i):
 
 Dynamics / churn (beyond the paper's static Scenarios 1-2)
 ----------------------------------------------------------
-``ScenarioConfig.churn = ChurnConfig(...)`` switches on a piecewise-constant
-time-varying resource model: time is divided into phases of ``period``
-seconds (``n_phases`` distinct phases, wrapping around), and in each phase a
-helper is independently *down* with prob ``p_down`` (packets sent to it are
-lost) or *degraded* with prob ``p_slow`` (its service rate ``mu_n`` is
-divided by ``slowdown``).  On top, each packet is lost i.i.d. with prob
-``drop_prob``.  A lost packet never produces a ``Tr``; the collector reacts
-with Algorithm 1 lines 13-14: the TTI backoff doubles (``ccp.on_timeout``,
-capped at ``max_backoff``) and the retransmission fires at the timeout
-deadline ``TO = 2*(TTI + RTT^data)`` (``ccp.timeout_deadline`` form).  A
-successful receipt resets the backoff, so helpers that rejoin are re-ramped.
-``churn=None`` (default) runs the exact static paper model, bit-for-bit.
+``ScenarioConfig.churn = ChurnConfig(...)`` switches on a time-varying
+resource model built from three loss processes plus a slowdown process.
+Time is divided into phases of ``period`` seconds (``n_phases`` distinct
+phases, wrapping around after ``n_phases * period`` seconds).
+
+1. **Per-helper outages.**  With the default ``outage_dist='phase'`` a
+   helper is independently *down* for whole phases with per-phase prob
+   ``p_down`` (the PR-1 Bernoulli model).  With ``outage_dist='geometric'``
+   or ``'lognormal'`` an outage *starts* at a phase boundary with prob
+   ``p_down`` but lasts a sampled duration — geometric over whole periods
+   (mean ``outage_mean``) or log-normal (mean ``outage_mean``, log-std
+   ``outage_sigma``) — so downtime is bursty in time rather than
+   memoryless per phase.  Packets that arrive (or would start computing)
+   while the helper is down are lost.
+
+2. **Gilbert–Elliott burst loss** (per helper, per packet).  A two-state
+   Markov chain over packet indices: good -> bad with prob ``ge_p_bad``,
+   bad -> good with prob ``ge_p_good``; a packet sent in the good state is
+   lost with prob ``ge_loss_good``, in the bad state with ``ge_loss_bad``.
+   The chain starts in its stationary distribution, so the marginal loss
+   rate is ``pi_bad*ge_loss_bad + (1-pi_bad)*ge_loss_good`` with
+   ``pi_bad = ge_p_bad / (ge_p_bad + ge_p_good)``.  This models bursty
+   radio-link fades that i.i.d. ``drop_prob`` cannot express
+   (cf. arXiv:2103.04247's correlated-erasure setting).
+
+3. **Correlated whole-cell outages.**  With per-phase prob ``p_cell`` an
+   outage *event* starts uniformly inside the phase; each helper belongs to
+   the affected cell independently with prob ``cell_frac`` and every member
+   is down simultaneously for the event's sampled duration (same duration
+   distribution as (1); ``outage_dist='phase'`` means one full period).
+   This takes correlated subsets of helpers down at once — the failure
+   mode a per-helper model cannot produce.
+
+On top, each packet is lost i.i.d. with prob ``drop_prob``, and a helper is
+*degraded* per phase with prob ``p_slow`` (its service rate ``mu_n`` is
+divided by ``slowdown``).  A lost packet never produces a ``Tr``; the
+collector reacts with Algorithm 1 lines 13-14: the TTI backoff doubles
+(``ccp.on_timeout``, capped at ``max_backoff``) and the retransmission
+fires at the timeout deadline ``TO = 2*(TTI + RTT^data)``
+(``ccp.timeout_deadline`` form).  A successful receipt resets the backoff,
+so helpers that rejoin are re-ramped.  ``churn=None`` (default) runs the
+exact static paper model, and a ``ChurnConfig`` with every loss knob at
+zero is bit-for-bit identical to it.
 
 Batched Monte-Carlo (``run_batch``)
 -----------------------------------
@@ -63,7 +94,11 @@ across the sweep).  Typical usage::
     out["efficiency"]  # (reps, N) per-helper measured efficiency
 
 This replaces a Python loop of ``reps`` jitted calls with one vmapped call
-and is the engine behind ``benchmarks/fig3|4|5|churn``.
+and is the engine behind ``benchmarks/fig3|4|5|churn``.  With
+``shard=True`` the key batch is additionally split across the local
+devices through ``shard_map`` on a 1-D 'data' mesh (padded to a
+device-count multiple); per-rep lanes never communicate, so the sharded
+results are identical to the unsharded vmap.
 """
 
 from __future__ import annotations
@@ -92,6 +127,8 @@ __all__ = [
     "run_ccp",
     "run_best",
     "run_naive",
+    "run_naive_oracle",
+    "KEY_SCHEDULE",
     "RING",
 ]
 
@@ -104,17 +141,30 @@ RING = 16  # ring-buffer slots for in-flight (Tr, TTI) pairs
 
 @dataclasses.dataclass(frozen=True)
 class ChurnConfig:
-    """Piecewise time-varying resource model (see module docstring).
+    """Time-varying resource model (see module docstring for the three loss
+    processes).
 
     period:     phase length in seconds; helper states re-randomize each
                 phase, so ``period`` sets the churn timescale.
     n_phases:   distinct phases drawn; the schedule wraps (mod) beyond that.
-    p_down:     per-phase prob a helper is unavailable (its packets are lost).
+    p_down:     per-phase prob a helper outage (packets sent to it are lost).
     p_slow:     per-phase prob a helper is degraded (mu_n / slowdown).
     slowdown:   service-rate divisor while degraded.
     drop_prob:  i.i.d. per-packet loss on top of outages.
     max_backoff: cap on the Alg.-1 line-13 multiplicative TTI backoff so a
                 rejoining helper is re-probed within a bounded interval.
+    outage_dist: outage-duration law for helper and cell outages — 'phase'
+                (whole phases, the PR-1 Bernoulli model), 'geometric'
+                (whole periods, mean ``outage_mean``) or 'lognormal'
+                (continuous, mean ``outage_mean``, log-std ``outage_sigma``).
+    outage_mean: mean outage duration in seconds for the duration laws.
+    outage_sigma: log-std of the log-normal duration law.
+    ge_p_bad:   Gilbert–Elliott good->bad transition prob per packet
+                (0 disables the GE chain entirely).
+    ge_p_good:  GE bad->good transition prob per packet.
+    ge_loss_good / ge_loss_bad: per-packet loss prob in each GE state.
+    p_cell:     per-phase prob a correlated whole-cell outage event starts.
+    cell_frac:  prob each helper belongs to a given cell event.
     """
 
     period: float = 5.0
@@ -124,10 +174,54 @@ class ChurnConfig:
     slowdown: float = 4.0
     drop_prob: float = 0.0
     max_backoff: float = 8.0
+    outage_dist: str = "phase"
+    outage_mean: float = 5.0
+    outage_sigma: float = 0.5
+    ge_p_bad: float = 0.0
+    ge_p_good: float = 0.25
+    ge_loss_good: float = 0.0
+    ge_loss_bad: float = 1.0
+    p_cell: float = 0.0
+    cell_frac: float = 0.5
+
+    def __post_init__(self):
+        if self.outage_dist not in ("phase", "geometric", "lognormal"):
+            raise ValueError(
+                f"outage_dist must be 'phase', 'geometric' or 'lognormal', "
+                f"got {self.outage_dist!r}"
+            )
+
+    @property
+    def ge_enabled(self) -> bool:
+        return self.ge_p_bad > 0.0
+
+    @property
+    def cell_enabled(self) -> bool:
+        return self.p_cell > 0.0
+
+    @property
+    def ge_stationary_bad(self) -> float:
+        """Stationary P(bad) of the GE chain (0 when disabled)."""
+        denom = self.ge_p_bad + self.ge_p_good
+        return self.ge_p_bad / denom if denom > 0 else 0.0
+
+    @property
+    def ge_loss_rate(self) -> float:
+        """Stationary marginal per-packet GE loss rate."""
+        pb = self.ge_stationary_bad
+        return pb * self.ge_loss_bad + (1.0 - pb) * self.ge_loss_good
 
     @property
     def neutral(self) -> bool:
-        return self.p_down == 0.0 and self.p_slow == 0.0 and self.drop_prob == 0.0
+        return (self.p_down == 0.0 and self.p_slow == 0.0
+                and self.drop_prob == 0.0 and not self.ge_enabled
+                and not self.cell_enabled)
+
+    def static_key(self) -> tuple:
+        """Hashable tuple of the *structural* knobs ``simulate_stream``
+        specializes on (passed as its static ``churn_static`` argument)."""
+        return (self.period, self.max_backoff, self.outage_dist,
+                self.ge_enabled, self.cell_enabled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,19 +294,71 @@ def draw_packet_tables(key, cfg: ScenarioConfig, mu, a, rate, M: int, R: int):
     return beta, d_up, d_ack, d_down
 
 
-def draw_dynamics(key, cfg: ScenarioConfig, M: int):
-    """Churn tables: drop (N, M) per-packet loss, up/speed (N, P) per-phase.
+def _draw_durations(key, ch: ChurnConfig, shape):
+    """Outage durations (seconds) under ``ch.outage_dist``.
 
-    ``speed`` is the multiplicative service-rate factor (1 normal,
-    1/slowdown degraded); ``up`` False means the helper is unreachable."""
+    'phase' -> exactly one period (the PR-1 whole-phase outage);
+    'geometric' -> whole periods, Geometric(period/outage_mean), mean
+    ``max(outage_mean, period)``; 'lognormal' -> continuous, mean
+    ``outage_mean``, log-std ``outage_sigma``."""
+    if ch.outage_dist == "geometric":
+        p = min(1.0, ch.period / max(ch.outage_mean, ch.period))
+        k = jax.random.geometric(key, p, shape)
+        return k.astype(jnp.float32) * ch.period
+    if ch.outage_dist == "lognormal":
+        mu_log = np.log(ch.outage_mean) - 0.5 * ch.outage_sigma ** 2
+        z = jax.random.normal(key, shape)
+        return jnp.exp(mu_log + ch.outage_sigma * z)
+    return jnp.full(shape, ch.period)
+
+
+def draw_dynamics(key, cfg: ScenarioConfig, M: int):
+    """Churn tables for one rep (see module docstring for the processes).
+
+    Always: ``drop`` (N, M) i.i.d. per-packet loss and ``speed`` (N, P)
+    per-phase service-rate factor (1 normal, 1/slowdown degraded).
+    Per-helper outages: ``up`` (N, P) phase table when
+    ``outage_dist='phase'``, else ``out_start``/``out_end`` (N, P) absolute
+    intervals inside the wrapping window ``n_phases * period``.
+    When enabled: ``cell_start``/``cell_end`` (P,) + ``cell_mask`` (N, P)
+    correlated-outage events, and ``ge_bad0`` (N,) initial states +
+    ``ge_u_trans``/``ge_u_loss`` (N, M) uniforms for the Gilbert–Elliott
+    chain (its four probabilities ride along as traced scalars in
+    ``ge_params`` so sweeping them does not retrace)."""
     ch = cfg.churn
-    kd, ku, ks = jax.random.split(key, 3)
+    kd, ku, ks, kdur, kc, kg = jax.random.split(key, 6)
     N, P = cfg.N, ch.n_phases
-    drop = jax.random.bernoulli(kd, ch.drop_prob, (N, M))
-    up = ~jax.random.bernoulli(ku, ch.p_down, (N, P))
-    slow = jax.random.bernoulli(ks, ch.p_slow, (N, P))
-    speed = jnp.where(slow, 1.0 / ch.slowdown, 1.0)
-    return dict(drop=drop, up=up, speed=speed)
+    dyn = dict(
+        drop=jax.random.bernoulli(kd, ch.drop_prob, (N, M)),
+        speed=jnp.where(jax.random.bernoulli(ks, ch.p_slow, (N, P)),
+                        1.0 / ch.slowdown, 1.0),
+    )
+    if ch.outage_dist == "phase":
+        dyn["up"] = ~jax.random.bernoulli(ku, ch.p_down, (N, P))
+    else:
+        ev = jax.random.bernoulli(ku, ch.p_down, (N, P))
+        start = jnp.broadcast_to(jnp.arange(P) * ch.period, (N, P))
+        dur = _draw_durations(kdur, ch, (N, P))
+        dyn["out_start"] = jnp.where(ev, start, jnp.inf)
+        dyn["out_end"] = jnp.where(ev, start + dur, -jnp.inf)
+    if ch.cell_enabled:
+        ke, ko, kl, km = jax.random.split(kc, 4)
+        ev = jax.random.bernoulli(ke, ch.p_cell, (P,))
+        start = jnp.arange(P) * ch.period + \
+            jax.random.uniform(ko, (P,)) * ch.period
+        dur = _draw_durations(kl, ch, (P,))
+        dyn["cell_start"] = jnp.where(ev, start, jnp.inf)
+        dyn["cell_end"] = jnp.where(ev, start + dur, -jnp.inf)
+        dyn["cell_mask"] = jax.random.bernoulli(km, ch.cell_frac, (N, P))
+    if ch.ge_enabled:
+        kb, kt, klo = jax.random.split(kg, 3)
+        dyn["ge_bad0"] = jax.random.bernoulli(kb, ch.ge_stationary_bad, (N,))
+        dyn["ge_u_trans"] = jax.random.uniform(kt, (N, M))
+        dyn["ge_u_loss"] = jax.random.uniform(klo, (N, M))
+        dyn["ge_params"] = jnp.asarray(
+            [ch.ge_p_bad, ch.ge_p_good, ch.ge_loss_good, ch.ge_loss_bad]
+        )
+    return dyn
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +370,20 @@ def _phase_lookup(table, t, period: float):
     P = table.shape[1]
     ph = (jnp.floor_divide(t, period).astype(jnp.int32) % P)[:, None]
     return jnp.take_along_axis(table, ph, axis=1)[:, 0]
+
+
+def _interval_hit(start, end, t, window: float):
+    """Per-interval membership of times t (N,) in [start, end) intervals,
+    with the schedule wrapping every ``window`` seconds.  Returns (N, P).
+
+    start/end are (N, P) per-helper intervals or (P,) shared event times
+    (broadcast against the N axis).  Intervals are laid out in absolute
+    time inside [0, window); an interval whose end spills past the window
+    also covers the wrapped tail [0, end - window)."""
+    tm = jnp.mod(t, window)[:, None]
+    if start.ndim == 1:
+        start, end = start[None, :], end[None, :]
+    return ((tm >= start) & (tm < end)) | (tm < (end - window))
 
 
 @functools.partial(
@@ -239,18 +399,26 @@ def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
           'best'  — oracle TTI_{n,i} = beta_{n,i} (paper's Best, eq. 13)
           'naive' — stop-and-wait: tx_{i+1} = Tr_i (paper's Naive, eq. 16)
     cfg_static: hashable (Bx, Br, Back, alpha) tuple.
-    churn_static: hashable (period, max_backoff) or None for the static
-        paper model.  When set, ``dyn`` (from :func:`draw_dynamics`), ``a``
-        (N,) runtime offsets, and — for 'naive' — ``naive_to`` (N,) fixed
-        retransmission timeouts must be provided.
+    churn_static: ``ChurnConfig.static_key()`` — hashable (period,
+        max_backoff, outage_dist, ge_enabled, cell_enabled) — or the legacy
+        (period, max_backoff) 2-tuple (phase outages only), or None for the
+        static paper model.  When set, ``dyn`` (from :func:`draw_dynamics`),
+        ``a`` (N,) runtime offsets, and — for 'naive' — ``naive_to`` (N,)
+        fixed retransmission timeouts must be provided.
     """
     Bx, Br, Back, alpha = cfg_static
     cfg = ccp_mod.CCPConfig(Bx=Bx, Br=Br, Back=Back, alpha=alpha)
     N, M = beta.shape
     state0 = ccp_mod.init_state(N)
     churn = churn_static is not None
+    ge_on = cell_on = False
+    outage_dist = "phase"
     if churn:
-        period, max_backoff = churn_static
+        if len(churn_static) == 2:  # legacy direct callers (phase model)
+            period, max_backoff = churn_static
+        else:
+            period, max_backoff, outage_dist, ge_on, cell_on = churn_static
+        window = period * dyn["speed"].shape[1]
 
     carry0 = dict(
         tx=jnp.zeros(N),              # send time of current packet (Tx_{n,1}=0)
@@ -266,6 +434,10 @@ def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
     )
     if churn:
         xs["drop"] = dyn["drop"].T
+    if ge_on:
+        carry0["ge_bad"] = dyn["ge_bad0"]
+        xs["ge_u_trans"] = dyn["ge_u_trans"].T
+        xs["ge_u_loss"] = dyn["ge_u_loss"].T
 
     def step(carry, x):
         tx = carry["tx"]
@@ -275,14 +447,38 @@ def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
             # Outage if the helper is down when the packet arrives or when
             # it would start computing; degraded phases stretch the runtime
             # (beta = a + eps/mu, so (beta-a)/speed rescales the random part).
-            is_up = (_phase_lookup(dyn["up"], arrive, period)
-                     & _phase_lookup(dyn["up"], start, period))
+            if outage_dist == "phase":
+                is_up = (_phase_lookup(dyn["up"], arrive, period)
+                         & _phase_lookup(dyn["up"], start, period))
+            else:
+                is_up = ~(_interval_hit(dyn["out_start"], dyn["out_end"],
+                                        arrive, window)
+                          | _interval_hit(dyn["out_start"], dyn["out_end"],
+                                          start, window)).any(axis=1)
+            if cell_on:
+                in_cell = dyn["cell_mask"] & (
+                    _interval_hit(dyn["cell_start"], dyn["cell_end"],
+                                  arrive, window)
+                    | _interval_hit(dyn["cell_start"], dyn["cell_end"],
+                                    start, window)
+                )
+                is_up &= ~in_cell.any(axis=1)
             sp = _phase_lookup(dyn["speed"], start, period)
             beta_i = jnp.where(sp == 1.0, x["beta"], a + (x["beta"] - a) / sp)
             lost = x["drop"] | ~is_up
         else:
             beta_i = x["beta"]
             lost = jnp.zeros((N,), bool)
+        if ge_on:
+            # Gilbert–Elliott: loss by the current state, then the per-packet
+            # state transition (the chain advances even for packets already
+            # lost to an outage — the radio fades regardless).
+            p_bad, p_good, l_good, l_bad = dyn["ge_params"]
+            bad = carry["ge_bad"]
+            lost |= x["ge_u_loss"] < jnp.where(bad, l_bad, l_good)
+            ge_bad_next = jnp.where(
+                bad, x["ge_u_trans"] >= p_good, x["ge_u_trans"] < p_bad
+            )
         received = ~lost
         done_ok = start + beta_i
         tr_ok = done_ok + x["d_down"]
@@ -355,6 +551,8 @@ def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
             tr_prev=jnp.where(received, tr_ok, carry["tr_prev"]),
             est=est, ring_tr=ring_tr, ring_tti=ring_tti,
         )
+        if ge_on:
+            new_carry["ge_bad"] = ge_bad_next
         out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive, beta=beta_i,
                    lost=lost, backoff=est.tti_backoff)
         return new_carry, out
@@ -405,29 +603,42 @@ def efficiency_measured(tr, idle, beta, t_end) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def _sim_one(key, cfg: ScenarioConfig, R: int, M: int, mode: str):
-    """Full single-rep pipeline as a traceable function of ``key``."""
+    """Full single-rep pipeline as a traceable function of ``key``.
+
+    ``mode`` adds 'naive_oracle' on top of simulate_stream's modes: the
+    same stop-and-wait stream as 'naive' but with a per-helper *oracle*
+    ARQ timer built from the true (unobservable) mean runtime and link
+    rate — it separates Naive's pipelining loss from its timer-adaptation
+    loss in the churn benchmarks (ROADMAP follow-up)."""
     k_h, k_p = jax.random.split(key)
     mu, a, rate = draw_helpers(k_h, cfg)
     beta, d_up, d_ack, d_down = draw_packet_tables(k_p, cfg, mu, a, rate, M, R)
     c = cfg.ccp_cfg(R)
     cfg_static = (c.Bx, c.Br, c.Back, c.alpha)
+    stream_mode = "naive" if mode == "naive_oracle" else mode
     if cfg.churn is None:
-        outs = simulate_stream(beta, d_up, d_ack, d_down, mode=mode,
+        outs = simulate_stream(beta, d_up, d_ack, d_down, mode=stream_mode,
                                cfg_static=cfg_static)
         tx_end = None
     else:
         k_c = jax.random.fold_in(key, 0xC0DE)
         dyn = draw_dynamics(k_c, cfg, M)
-        # Naive has no estimator (eq. 16 stop-and-wait), so its ARQ timer is
-        # a *static* one provisioned for the slowest helper class — it cannot
-        # adapt to per-helper speed, which is exactly what it pays for under
-        # churn.
-        mu_min = min(cfg.mu_choices)
-        a_max = (cfg.a_const if cfg.a_mode == "const" else 1.0 / mu_min)
-        naive_to = 2.0 * ((a_max + 1.0 / mu_min) + (c.Bx + c.Br) / rate)
+        if mode == "naive_oracle":
+            # Oracle timer: the true per-helper mean runtime + data RTT.
+            naive_to = ccp_mod.arq_timeout(a + 1.0 / mu, (c.Bx + c.Br) / rate)
+        else:
+            # Naive has no estimator (eq. 16 stop-and-wait), so its ARQ
+            # timer is a *static* one provisioned for the slowest helper
+            # class — it cannot adapt to per-helper speed, which is exactly
+            # what it pays for under churn.
+            mu_min = min(cfg.mu_choices)
+            a_max = (cfg.a_const if cfg.a_mode == "const" else 1.0 / mu_min)
+            naive_to = ccp_mod.arq_timeout(
+                a_max + 1.0 / mu_min, (c.Bx + c.Br) / rate
+            )
         outs = simulate_stream(
-            beta, d_up, d_ack, d_down, mode=mode, cfg_static=cfg_static,
-            churn_static=(cfg.churn.period, cfg.churn.max_backoff),
+            beta, d_up, d_ack, d_down, mode=stream_mode,
+            cfg_static=cfg_static, churn_static=cfg.churn.static_key(),
             dyn=dyn, a=a, naive_to=naive_to,
         )
         tx_end = outs["tx_end"]
@@ -517,26 +728,101 @@ def run_naive(key, cfg: ScenarioConfig, R: int):
     return _run_mode(key, cfg, R, "naive")
 
 
-def batch_keys(reps: int, seed0: int = 0) -> jnp.ndarray:
-    """The batched counterpart of ``PRNGKey(seed0 * 100003 + r)`` per rep."""
-    return jax.vmap(jax.random.PRNGKey)(seed0 * 100003 + jnp.arange(reps))
+def run_naive_oracle(key, cfg: ScenarioConfig, R: int):
+    """Naive stop-and-wait with the per-helper oracle ARQ timer (see
+    :func:`_sim_one`) — only meaningful under churn."""
+    return _run_mode(key, cfg, R, "naive_oracle")
+
+
+# Default key schedule, recorded in bench JSON artifacts: PR-2 replaced the
+# collision-prone ``PRNGKey(seed0 * 100003 + r)`` arithmetic (seed0=1,
+# r=100003 collides with seed0=2, r=0, etc.) with ``fold_in`` over a root
+# key, which is collision-free over the full (seed0, rep) space.  The value
+# is a valid ``batch_keys(schedule=...)`` name; artifacts predating the
+# switch carry no marker at all.
+KEY_SCHEDULE = "fold_in"
+
+
+def batch_keys(reps: int, seed0: int = 0,
+               schedule: str = KEY_SCHEDULE) -> jnp.ndarray:
+    """Per-rep PRNG keys: ``fold_in(PRNGKey(seed0), r)`` for rep r.
+
+    ``schedule='legacy'`` is the compat shim reproducing the PR-1
+    ``PRNGKey(seed0 * 100003 + r)`` arithmetic, which collides across
+    ``(seed0, rep)`` pairs once ``reps`` approaches the 100003 stride
+    (bench JSONs carry :data:`KEY_SCHEDULE` so runs are comparable)."""
+    if schedule == "legacy":
+        return jax.vmap(jax.random.PRNGKey)(seed0 * 100003 + jnp.arange(reps))
+    if schedule != "fold_in":
+        raise ValueError(f"unknown key schedule {schedule!r}")
+    root = jax.random.PRNGKey(seed0)
+    return jax.vmap(lambda r: jax.random.fold_in(root, r))(jnp.arange(reps))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_batch_fn(cfg, R: int, M: int, mode: str, devs: tuple,
+                      batch: int):
+    """Jitted shard_map runner: the key batch is split over a 1-D 'data'
+    mesh of ``devs`` and each device vmaps its shard through ``_sim_one``
+    — per-rep lanes are independent, so no collectives and results are
+    identical to the single-device vmap."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from ..parallel import sharding as shd
+
+    mesh = shd.data_mesh(devs)
+    spec = shd.batch_spec(mesh, batch, extra_dims=1)
+    body = lambda k: jax.vmap(lambda kk: _sim_one(kk, cfg, R, M, mode))(k)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,),
+                   out_specs=PartitionSpec("data"), check_rep=False)
+    return jax.jit(fn)
+
+
+def _sim_batch_sharded(keys, cfg: ScenarioConfig, R: int, M: int, mode: str,
+                       devices=None):
+    """Device-sharded batch: pad the key batch to a multiple of the device
+    count (padding reps are discarded after the run) and shard it over the
+    local device mesh."""
+    devs = tuple(devices) if devices is not None else tuple(jax.local_devices())
+    B = keys.shape[0]
+    pad = (-B) % len(devs)
+    keys_p = keys if pad == 0 else jnp.concatenate(
+        [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])]
+    )
+    out = _sharded_batch_fn(cfg, R, M, mode, devs, keys_p.shape[0])(keys_p)
+    return {k: v[:B] for k, v in out.items()}
 
 
 def run_batch(keys, cfg: ScenarioConfig, R: int, mode: str,
-              M_override: Optional[int] = None) -> Dict[str, np.ndarray]:
+              M_override: Optional[int] = None, shard: bool = False,
+              devices=None) -> Dict[str, np.ndarray]:
     """Vmapped Monte-Carlo over a batch of PRNG keys (see module docstring).
 
     Returns a dict of stacked arrays: T (B,), valid (B,), efficiency (B, N),
     r_n, mu, a, rate, max_backoff, lost_frac (B, N), plus the shared horizon
     M actually used.  All reps share one bucketed horizon; if any rep's
     completion time is uncertified the horizon doubles and the batch re-runs.
+
+    ``valid`` marks reps whose completion time is *certified*; when the
+    horizon cap is hit under heavy churn, uncertified reps come back with
+    ``valid=False`` and MUST be dropped (and counted) by the caller —
+    ``benchmarks.common.mc_sim`` does this — never averaged.
+
+    ``shard=True`` splits the key batch over ``devices`` (default: all
+    local devices) via ``shard_map`` on a 1-D 'data' mesh, padding the
+    batch up to a device-count multiple; results are identical to the
+    unsharded vmap because per-rep lanes never communicate.
     """
     keys = jnp.asarray(keys)
     kk = R + cfg.K(R)
     cap = _m_cap(cfg, kk)
     M = M_override if M_override is not None else _horizon_shared(cfg, R)
     for _ in range(8):
-        out = _sim_batch_jit(keys, cfg, R, M, mode)
+        if shard:
+            out = _sim_batch_sharded(keys, cfg, R, M, mode, devices)
+        else:
+            out = _sim_batch_jit(keys, cfg, R, M, mode)
         if bool(out["valid"].all()) or M >= cap or M_override is not None:
             break
         M = min(M * 2, cap)

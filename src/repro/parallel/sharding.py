@@ -125,6 +125,16 @@ def opt_state_shardings(mesh: Mesh, axes_tree: PyTree, rules: AxisRule,
     return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)
 
 
+def data_mesh(devices=None) -> Mesh:
+    """1-D 'data' mesh over the given devices (default: all local devices).
+
+    Used by the Monte-Carlo engine's device-sharded batch runner
+    (``core.simulator.run_batch(shard=True)``) and available to any other
+    embarrassingly-parallel batch fan-out."""
+    devs = list(devices) if devices is not None else jax.local_devices()
+    return Mesh(np.asarray(devs), ("data",))
+
+
 def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
     """Shard the leading batch dim over ('pod','data') as divisibility
     allows; remaining dims replicated."""

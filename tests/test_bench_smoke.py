@@ -1,0 +1,48 @@
+"""Fast-lane smoke of the benchmark harness: ``benchmarks.run --smoke``.
+
+Runs the churn figure end-to-end at tiny scale (2 reps, R=200, N=20,
+sweep endpoints only) in a subprocess, pointing BENCH_OUT_DIR at a tmpdir
+so the committed full-scale artifacts are untouched, and checks the
+artifact schema: the key-schedule meta marker, all three sweeps, all four
+modes, and per-point invalid-rep counts (dropped, never averaged).
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_run_smoke_fig_churn(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["BENCH_OUT_DIR"] = str(tmp_path)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke", "--shard",
+         "--only", "fig_churn"],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    csv = [l for l in proc.stdout.splitlines() if l.startswith("fig_churn,")]
+    assert csv, proc.stdout
+
+    doc = json.loads((tmp_path / "fig_churn.json").read_text())
+    assert doc["meta"]["key_schedule"] == "fold_in"
+    rows = doc["data"]
+    assert {r["sweep"] for r in rows} == {"iid", "burst", "cell"}
+    for r in rows:
+        for mode in ("ccp", "best", "naive", "naive_oracle"):
+            assert "invalid" in r[mode], r
+            assert r[mode]["invalid"] + 1 > 0  # present and an int
+    # the endpoints tell the adaptivity story even at smoke scale: the
+    # static-timer Naive must degrade more than CCP on the loss sweeps
+    by = {(r["sweep"], i): r for s in ("iid", "burst", "cell")
+          for i, r in enumerate(rr for rr in rows if rr["sweep"] == s)}
+    for sweep in ("iid", "burst"):
+        lo, hi = by[(sweep, 0)], by[(sweep, 1)]
+        ccp_deg = hi["ccp"]["mean"] / lo["ccp"]["mean"]
+        naive_deg = hi["naive"]["mean"] / lo["naive"]["mean"]
+        assert naive_deg > ccp_deg, (sweep, ccp_deg, naive_deg)

@@ -68,6 +68,68 @@ def test_shape_mismatch_raises(tmp_path):
         ck.restore(tmp_path, 1, bad)
 
 
+def test_zlib_roundtrip_with_zstd_missing(tmp_path, monkeypatch):
+    """A zlib-only build (no zstandard wheel) must round-trip its own
+    checkpoints: zlib-written leaf files + codec recorded in the index."""
+    from repro.checkpoint import checkpoint as ckm
+
+    monkeypatch.setattr(ckm, "zstandard", None)
+    monkeypatch.setattr(ckm, "DEFAULT_CODEC", "zlib")
+    t = _tree(jax.random.PRNGKey(6))
+    ck.save(tmp_path, 1, t)
+    assert list(tmp_path.glob("step_*/*.zz")), "zlib leaves carry .zz"
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    r, _ = ck.restore(tmp_path, 1, target)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zstd_checkpoint_without_wheel_raises_actionable_error(
+        tmp_path, monkeypatch):
+    """A zstd-written checkpoint read in a zlib-only environment must fail
+    with one error naming the missing codec — not a deep decode traceback
+    from trying the wrong decompressor on each leaf."""
+    import types
+
+    from repro.checkpoint import checkpoint as ckm
+
+    class _FakeCompressor:
+        def __init__(self, level=3):
+            pass
+
+        def compress(self, data):
+            return data  # restore must fail before ever decoding a leaf
+
+    monkeypatch.setattr(
+        ckm, "zstandard", types.SimpleNamespace(ZstdCompressor=_FakeCompressor)
+    )
+    monkeypatch.setattr(ckm, "DEFAULT_CODEC", "zstd")
+    t = _tree(jax.random.PRNGKey(7))
+    ck.save(tmp_path, 1, t)
+    assert list(tmp_path.glob("step_*/*.zst")), "zstd leaves carry .zst"
+
+    monkeypatch.setattr(ckm, "zstandard", None)  # the zlib-only environment
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    with pytest.raises(RuntimeError, match="zstandard"):
+        ck.restore(tmp_path, 1, target)
+
+
+def test_corrupt_leaf_error_names_codec(tmp_path, monkeypatch):
+    """A leaf that fails to decode reports the leaf, file and codec instead
+    of surfacing the raw zlib.error."""
+    from repro.checkpoint import checkpoint as ckm
+
+    monkeypatch.setattr(ckm, "zstandard", None)
+    monkeypatch.setattr(ckm, "DEFAULT_CODEC", "zlib")
+    t = _tree(jax.random.PRNGKey(8))
+    ck.save(tmp_path, 1, t)
+    leaf = sorted(tmp_path.glob("step_*/*.zz"))[0]
+    leaf.write_bytes(b"\x00not-zlib-data")
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    with pytest.raises(RuntimeError, match="zlib"):
+        ck.restore(tmp_path, 1, target)
+
+
 def test_restore_with_shardings(tmp_path):
     """Reshard-on-restore: restore onto an explicit device placement."""
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

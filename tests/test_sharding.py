@@ -100,3 +100,16 @@ def test_opt_state_zero1(tmp_path):
     # grab embed (4608 % 16 == 0) for the optimizer moments
     spec = shd.spec_for_axes(("embed", "heads", "head_dim"), rules)
     assert spec == P(None, "model", None)
+
+
+def test_data_mesh_over_local_devices():
+    """data_mesh builds the 1-D 'data' mesh the MC engine shards over."""
+    import jax
+
+    mesh = shd.data_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh.devices.shape == (jax.local_device_count(),)
+    sub = shd.data_mesh(jax.local_devices()[:1])
+    assert sub.devices.shape == (1,)
+    # batch divisible -> leading dim sharded over 'data'
+    assert shd.batch_spec(sub, 4, extra_dims=1) == P("data", None)

@@ -31,8 +31,7 @@ def test_run_batch_matches_sequential(mode):
     keys = simulator.batch_keys(reps)
     batch = simulator.run_batch(keys, CFG, R, mode)
     for r in range(reps):
-        # batch_keys(reps, seed0=0)[r] == PRNGKey(r)
-        seq = simulator._run_mode(jax.random.PRNGKey(r), CFG, R, mode,
+        seq = simulator._run_mode(keys[r], CFG, R, mode,
                                   M_override=batch["M"])
         np.testing.assert_allclose(batch["T"][r], seq["T"], rtol=1e-6)
         np.testing.assert_array_equal(batch["r_n"][r], seq["r_n"])
@@ -50,10 +49,35 @@ def test_run_batch_matches_sequential_under_churn():
     keys = simulator.batch_keys(3)
     batch = simulator.run_batch(keys, cfg, R, "ccp")
     for r in range(3):
-        seq = simulator._run_mode(jax.random.PRNGKey(r), cfg, R, "ccp",
+        seq = simulator._run_mode(keys[r], cfg, R, "ccp",
                                   M_override=batch["M"])
         np.testing.assert_allclose(batch["T"][r], seq["T"], rtol=1e-6)
         np.testing.assert_array_equal(batch["r_n"][r], seq["r_n"])
+
+
+# ---------------------------------------------------------------------------
+# key schedule
+# ---------------------------------------------------------------------------
+
+def test_batch_keys_fold_in_has_no_cross_seed_collisions():
+    """The legacy ``PRNGKey(seed0*100003 + r)`` schedule collides across
+    (seed0, rep) pairs — e.g. (0, 100003) == (1, 0); fold_in does not."""
+    legacy_a = simulator.batch_keys(100004, seed0=0, schedule="legacy")
+    legacy_b = simulator.batch_keys(1, seed0=1, schedule="legacy")
+    np.testing.assert_array_equal(legacy_a[100003], legacy_b[0])  # the bug
+    a = simulator.batch_keys(100004, seed0=0)
+    b = simulator.batch_keys(1, seed0=1)
+    assert not np.array_equal(np.asarray(a[100003]), np.asarray(b[0]))
+    # and the default schedule is fold_in over the root key
+    root = jax.random.PRNGKey(0)
+    np.testing.assert_array_equal(a[17], jax.random.fold_in(root, 17))
+
+
+def test_batch_keys_legacy_shim_matches_old_formula():
+    old = jax.vmap(jax.random.PRNGKey)(5 * 100003 + jnp.arange(8))
+    np.testing.assert_array_equal(
+        simulator.batch_keys(8, seed0=5, schedule="legacy"), old
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -180,11 +204,18 @@ def test_ccp_degrades_gracefully_vs_naive():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("mode", ["ccp", "best", "naive"])
-def test_neutral_churn_is_bit_for_bit_static(mode):
+@pytest.mark.parametrize("outage_dist", ["phase", "geometric", "lognormal"])
+def test_neutral_churn_is_bit_for_bit_static(mode, outage_dist):
+    """A ChurnConfig with every loss knob at zero — whatever the structural
+    knobs (outage-duration law, GE recovery prob, cell fraction) — must be
+    numerically invisible."""
     static = CFG
     neutral = simulator.ScenarioConfig(
         N=20, scenario=1,
-        churn=simulator.ChurnConfig(p_down=0.0, p_slow=0.0, drop_prob=0.0),
+        churn=simulator.ChurnConfig(
+            p_down=0.0, p_slow=0.0, drop_prob=0.0,
+            outage_dist=outage_dist, ge_p_bad=0.0, p_cell=0.0,
+        ),
     )
     assert neutral.churn.neutral
     key = jax.random.PRNGKey(7)
@@ -196,3 +227,222 @@ def test_neutral_churn_is_bit_for_bit_static(mode):
     np.testing.assert_array_equal(s["efficiency"], n["efficiency"])
     assert (n["lost_frac"] == 0).all()
     assert (n["max_backoff"] == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# (d) Gilbert–Elliott burst loss
+# ---------------------------------------------------------------------------
+
+def test_ge_stationary_loss_rate():
+    """The GE chain starts in its stationary distribution, so the marginal
+    per-packet loss rate over many helpers/packets must match
+    ``pi_bad*ge_loss_bad + (1-pi_bad)*ge_loss_good``."""
+    ch = simulator.ChurnConfig(ge_p_bad=0.05, ge_p_good=0.2,
+                               ge_loss_bad=0.8, ge_loss_good=0.02)
+    cfg = simulator.ScenarioConfig(N=100, scenario=1, churn=ch)
+    out = simulator.run_batch(simulator.batch_keys(3), cfg, 400, "ccp")
+    measured = float(out["lost_frac"].mean())
+    expected = ch.ge_loss_rate
+    assert abs(measured - expected) < 0.15 * expected, (measured, expected)
+
+
+def test_ge_losses_are_bursty():
+    """With a slow-recovering bad state (small ge_p_good) and
+    loss_bad=1/loss_good=0, losses are runs of mean length ~1/ge_p_good —
+    far longer than i.i.d. loss at the same marginal rate would produce."""
+    ch = simulator.ChurnConfig(ge_p_bad=0.02, ge_p_good=0.1,
+                               ge_loss_bad=1.0, ge_loss_good=0.0)
+    cfg = simulator.ScenarioConfig(N=100, scenario=1, churn=ch)
+    # run_batch only reports per-helper lost_frac; run the stream directly
+    # to get the raw (N, M) loss table for run-length statistics.
+    k = jax.random.PRNGKey(0)
+    k_h, k_p = jax.random.split(k)
+    mu, a, rate = simulator.draw_helpers(k_h, cfg)
+    beta, d_up, d_ack, d_down = simulator.draw_packet_tables(
+        k_p, cfg, mu, a, rate, 256, 400)
+    dyn = simulator.draw_dynamics(jax.random.fold_in(k, 0xC0DE), cfg, 256)
+    outs = simulator.simulate_stream(
+        beta, d_up, d_ack, d_down, mode="best",
+        cfg_static=(8.0 * 400, 8.0, 1.0, 0.25),
+        churn_static=cfg.churn.static_key(), dyn=dyn, a=a,
+    )
+    table = np.asarray(outs["lost"])
+    run_lengths = []
+    for row in table:
+        n = 0
+        for v in row:
+            if v:
+                n += 1
+            elif n:
+                run_lengths.append(n)
+                n = 0
+        if n:
+            run_lengths.append(n)
+    mean_run = np.mean(run_lengths)
+    # i.i.d. loss at this marginal rate would give mean run ~1/(1-rate)≈1.2;
+    # the GE chain gives ~1/ge_p_good = 10.
+    assert mean_run > 3.0, mean_run
+    assert abs(mean_run - 1.0 / cfg.churn.ge_p_good) < 0.5 / cfg.churn.ge_p_good
+
+
+# ---------------------------------------------------------------------------
+# (e) correlated cell outages + duration distributions
+# ---------------------------------------------------------------------------
+
+def test_cell_outage_takes_members_down_simultaneously():
+    """Hand-built single cell event [2, 4): member helpers lose exactly the
+    packets arriving in the window, non-members lose nothing."""
+    N, M, period = 3, 64, 5.0
+    beta = jnp.full((N, M), 0.25)
+    d_up = jnp.full((N, M), 0.01)
+    d_ack = jnp.full((N, M), 0.001)
+    d_down = jnp.full((N, M), 0.01)
+    P = 8  # window = 40s >> horizon, so no wrap in this test
+    dyn = dict(
+        drop=jnp.zeros((N, M), bool),
+        speed=jnp.ones((N, P)),
+        up=jnp.ones((N, P), bool),
+        cell_start=jnp.asarray([2.0]),
+        cell_end=jnp.asarray([4.0]),
+        cell_mask=jnp.asarray([[True], [True], [False]]),
+    )
+    outs = simulator.simulate_stream(
+        beta, d_up, d_ack, d_down, mode="best",
+        cfg_static=(8.0 * R, 8.0, 1.0, 0.25),
+        churn_static=(period, 8.0, "phase", False, True),
+        dyn=dyn, a=jnp.full((N,), 0.1),
+    )
+    lost = np.asarray(outs["lost"])
+    arrive = np.asarray(outs["arrive"])
+    in_win = (arrive >= 2.0) & (arrive < 4.0)
+    assert lost[2].sum() == 0, "non-member must not lose packets"
+    assert lost[0].sum() > 0 and lost[1].sum() > 0
+    # members lose exactly the packets whose arrival (or compute start,
+    # which for back-to-back streaming can trail into the window) hits it
+    assert (lost[:2] & in_win[:2] == in_win[:2]).all()
+
+
+def test_outage_duration_distributions():
+    """Geometric durations are whole periods with the configured mean;
+    log-normal durations are continuous with the configured mean."""
+    key = jax.random.PRNGKey(0)
+    for dist, check in (
+        ("geometric", lambda d: np.allclose(d % 5.0, 0.0)),
+        ("lognormal", lambda d: not np.allclose(d % 5.0, 0.0)),
+    ):
+        ch = simulator.ChurnConfig(period=5.0, outage_dist=dist,
+                                   outage_mean=15.0, outage_sigma=0.5,
+                                   p_down=1.0)
+        d = np.asarray(simulator._draw_durations(key, ch, (4000,)))
+        assert (d > 0).all()
+        assert check(d), dist
+        assert abs(d.mean() - 15.0) < 2.0, (dist, d.mean())
+
+
+def test_duration_outages_last_longer_than_phase_outages():
+    """With the same outage start rate, geometric durations with mean >>
+    period must produce more downtime (higher loss) than whole-phase
+    outages."""
+    base = dict(period=5.0, p_down=0.1, max_backoff=8.0)
+    keys = simulator.batch_keys(4)
+    cfg_p = simulator.ScenarioConfig(
+        N=30, scenario=1, churn=simulator.ChurnConfig(**base))
+    cfg_g = simulator.ScenarioConfig(
+        N=30, scenario=1, churn=simulator.ChurnConfig(
+            outage_dist="geometric", outage_mean=20.0, **base))
+    lost_p = simulator.run_batch(keys, cfg_p, 300, "ccp")["lost_frac"].mean()
+    lost_g = simulator.run_batch(keys, cfg_g, 300, "ccp")["lost_frac"].mean()
+    assert lost_g > 1.5 * lost_p, (lost_p, lost_g)
+
+
+# ---------------------------------------------------------------------------
+# (f) naive + oracle timer baseline
+# ---------------------------------------------------------------------------
+
+def test_naive_oracle_timer_between_naive_and_best():
+    """The oracle-timer Naive removes the timer-adaptation penalty but keeps
+    the stop-and-wait pipelining penalty: under loss-heavy churn it must
+    beat static-timer Naive and stay above Best."""
+    cfg = simulator.ScenarioConfig(
+        N=20, scenario=1, mu_choices=(1.0, 3.0, 9.0), a_mode="inv_mu",
+        rate_lo=1e6, rate_hi=2e6,
+        churn=simulator.ChurnConfig(period=10.0, p_down=0.05, p_slow=0.1,
+                                    drop_prob=0.2, max_backoff=8.0),
+    )
+    keys = simulator.batch_keys(6)
+    t = {m: simulator.run_batch(keys, cfg, 300, m)["T"].mean()
+         for m in ("best", "naive", "naive_oracle")}
+    assert t["naive_oracle"] < t["naive"], t
+    assert t["naive_oracle"] > t["best"], t
+
+
+# ---------------------------------------------------------------------------
+# (g) device-sharded batch == unsharded vmap, bitwise
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+from repro.core import simulator
+
+assert len(jax.local_devices()) == 8
+cfg = simulator.ScenarioConfig(
+    N=8, scenario=1,
+    churn=simulator.ChurnConfig(p_down=0.05, drop_prob=0.1,
+                                ge_p_bad=0.02, ge_p_good=0.2,
+                                ge_loss_bad=0.5),
+)
+
+def eq(x, y):
+    x, y = np.asarray(x), np.asarray(y)
+    # bitwise equality; efficiency carries NaN for helpers that computed
+    # nothing within T, and NaN == NaN must count as equal here
+    if x.dtype.kind == "f":
+        return np.array_equal(x, y, equal_nan=True)
+    return np.array_equal(x, y)
+
+out = {}
+# 11 reps: not a device-count multiple, so the pad-and-slice path runs too.
+keys = simulator.batch_keys(11)
+for mode in ("ccp", "naive_oracle"):
+    a = simulator.run_batch(keys, cfg, 120, mode)
+    b = simulator.run_batch(keys, cfg, 120, mode, shard=True)
+    out[f"{mode}_bitwise_equal"] = bool(all(eq(a[k], b[k]) for k in a))
+    out[f"{mode}_M"] = int(a["M"])
+# explicit device subset (3 of 8, another pad case)
+c = simulator.run_batch(keys, cfg, 120, "ccp", shard=True,
+                        devices=jax.local_devices()[:3])
+a = simulator.run_batch(keys, cfg, 120, "ccp")
+out["subset_bitwise_equal"] = bool(all(eq(a[k], c[k]) for k in a))
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.multidevice
+def test_sharded_run_batch_matches_vmap_bitwise():
+    """run_batch(shard=True) over 8 forced host devices returns results
+    bitwise identical to the unsharded vmap, including when the batch does
+    not divide the device count (padding) and on a device subset."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT], capture_output=True,
+        text=True, timeout=900,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    import json
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    assert out["ccp_bitwise_equal"], out
+    assert out["naive_oracle_bitwise_equal"], out
+    assert out["subset_bitwise_equal"], out
