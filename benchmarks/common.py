@@ -28,10 +28,10 @@ def _stats(a: np.ndarray) -> Dict[str, float]:
 
 def mc(fn: Callable, cfg, R: int, reps: int, seed0: int = 0) -> Dict[str, float]:
     """Sequential Monte-Carlo mean/std of fn(key, cfg, R)["T"] over ``reps``
-    draws.  Used for the numpy-driven baselines (uncoded/HCMM); the simulator
-    modes go through the vmapped :func:`mc_sim` instead.  Keys come from the
-    same fold_in schedule as :func:`mc_sim`, so baseline and simulator rows
-    in one figure share helper draws rep-for-rep."""
+    draws.  Kept for the numpy-driven baseline reference paths; the figure
+    benchmarks go through the vmapped :func:`mc_policy` instead.  Keys come
+    from the same fold_in schedule, so baseline and policy rows in one
+    figure share helper draws rep-for-rep."""
     from repro.core import simulator
 
     keys = simulator.batch_keys(reps, seed0)
@@ -55,34 +55,62 @@ def certified(out: Dict, label: str) -> np.ndarray:
     return valid
 
 
-def mc_sim(cfg, R: int, reps: int, mode: str, seed0: int = 0,
-           shard: bool = False) -> Dict[str, float]:
-    """Batched Monte-Carlo over ``reps`` vmapped keys via simulator.run_batch
-    (one compile + one device call instead of ``reps`` sequential runs).
-    Uncertified reps (horizon cap hit under heavy churn -> T possibly inf or
-    understated) are excluded from the stats and counted in ``invalid``.
-    ``shard=True`` splits the key batch over the local devices."""
-    from repro.core import simulator
+def mc_policy(cfg, R: int, reps: int, policy: str, seed0: int = 0,
+              shard: bool = False) -> Dict[str, float]:
+    """Batched Monte-Carlo over ``reps`` vmapped keys via the policy engine
+    (one compile + one device call instead of ``reps`` sequential runs);
+    ``policy`` is any registered name — ``ccp``, ``best``, ``naive``,
+    ``naive_oracle``, ``uncoded_mean``/``uncoded_mu``, ``hcmm``,
+    ``adaptive_rate``, ... Uncertified reps (horizon cap hit under heavy
+    churn -> T possibly inf or understated) are excluded from the stats and
+    counted in ``invalid``.  ``shard=True`` splits the key batch over the
+    local devices."""
+    from repro.core import engine, simulator
 
-    out = simulator.run_batch(simulator.batch_keys(reps, seed0), cfg, R, mode,
-                              shard=shard)
-    valid = certified(out, f"mc_sim mode={mode!r} R={R}")
+    out = engine.Engine(shard=shard).run(
+        cfg, policy, simulator.batch_keys(reps, seed0), R)
+    valid = certified(out, f"mc_policy policy={policy!r} R={R}")
     stats = _stats(np.asarray(out["T"])[valid])
     stats["invalid"] = int((~valid).sum())
     return stats
 
 
-def emit(name: str, rows: List[dict], derived: str = "") -> None:
+def mc_sim(cfg, R: int, reps: int, mode: str, seed0: int = 0,
+           shard: bool = False) -> Dict[str, float]:
+    """Deprecated mode-string alias of :func:`mc_policy`."""
+    import warnings
+
+    warnings.warn("mc_sim(mode=...) is deprecated; use mc_policy",
+                  DeprecationWarning, stacklevel=2)
+    return mc_policy(cfg, R, reps, mode, seed0=seed0, shard=shard)
+
+
+def policy_meta(names) -> Dict[str, int]:
+    """``meta.policy`` entry for bench artifacts: registry name -> version
+    for every policy the run swept (artifact rows from different policy
+    implementations are never compared silently)."""
+    from repro.core import policies
+
+    return {n: policies.get(n).version for n in names}
+
+
+def emit(name: str, rows: List[dict], derived: str = "",
+         policies: Dict[str, int] | None = None) -> None:
     """Write JSON artifact + the harness CSV line ``name,us_per_call,derived``.
 
     The artifact is ``{"meta": {...}, "data": rows}``: ``meta`` records the
     PRNG key schedule (PR 2 switched batch_keys from the collision-prone
-    ``seed0*100003 + r`` arithmetic to ``fold_in``) so numbers from
-    different schedules are never compared silently."""
+    ``seed0*100003 + r`` arithmetic to ``fold_in``) and — for policy sweeps
+    — ``meta.policy``, the registry name -> version map from
+    :func:`policy_meta`, so numbers from different schedules or policy
+    implementations are never compared silently."""
     from repro.core import simulator
 
     OUT_DIR.mkdir(parents=True, exist_ok=True)
-    doc = {"meta": {"key_schedule": simulator.KEY_SCHEDULE}, "data": rows}
+    meta = {"key_schedule": simulator.KEY_SCHEDULE}
+    if policies:
+        meta["policy"] = dict(policies)
+    doc = {"meta": meta, "data": rows}
     (OUT_DIR / f"{name}.json").write_text(json.dumps(doc, indent=1))
     print(f"{name},-,{derived}")
 

@@ -10,17 +10,19 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.ccp_paper import EFFICIENCY, FIG4
-from repro.core import simulator, theory
+from repro.core import engine, simulator, theory
 
-from .common import certified, emit
+from .common import certified, emit, policy_meta
 
 
-def run(reps: int = 20, R: int = 8000, shard: bool = False) -> dict:
+def run(reps: int = 20, R: int = 8000, shard: bool = False,
+        policy: str = "ccp") -> dict:
     rows = []
+    eng = engine.Engine(shard=shard)
     keys = simulator.batch_keys(reps)
     for sc in (1, 2):
         cfg = FIG4[sc]
-        out = simulator.run_batch(keys, cfg, R, "ccp", shard=shard)
+        out = eng.run(cfg, policy, keys, R)
         valid = certified(out, "efficiency")
         eff = float(np.nanmean(out["efficiency"][valid]))
         rtt = (8.0 * R + 8.0) / out["rate"][valid]
@@ -36,7 +38,8 @@ def run(reps: int = 20, R: int = 8000, shard: bool = False) -> dict:
     emit("efficiency", rows,
          derived=";".join(
              f"sc{r['scenario']}_meas={r['measured']:.4f},theory={r['theory_eq12']:.4f}"
-             for r in rows))
+             for r in rows),
+         policies=policy_meta((policy,)))
     return {"rows": rows}
 
 

@@ -12,37 +12,44 @@ resources") to *actual* dynamics across three loss regimes, each a sweep:
            axis is the per-phase event probability
 
 all of which exercise the Algorithm 1 lines 13-14 timeout/backoff path
-inside the simulator scan.
+inside the engine scan.
 
 Setup: Fig.-4-style heterogeneity (mu ~ U{1,3,9}, a_n = 1/mu_n) on 1-2 Mbps
-links.  Four modes per point: CCP's per-helper adapted timeout degrades
-gracefully toward Best; Naive's retransmission timer is statically
-provisioned for the slowest helper class (it has no estimator), so every
-loss on a fast helper stalls it ~mu_max/mu_min times longer than needed and
-its delay blows up with the loss rate; ``naive_oracle`` gives Naive a
-per-helper true-mean timer, separating its pipelining loss (still there)
-from its timer-adaptation loss (gone) — the ROADMAP-requested baseline.
+links.  Any subset of registered policies sweeps through the one engine
+code path (``--policies ccp,hcmm,adaptive_rate``); the default set tells
+the adaptivity story: CCP's per-helper adapted timeout degrades gracefully
+toward Best; Naive's retransmission timer is statically provisioned for
+the slowest helper class (it has no estimator), so every loss on a fast
+helper stalls it ~mu_max/mu_min times longer than needed and its delay
+blows up with the loss rate; ``naive_oracle`` gives Naive a per-helper
+true-mean timer, separating its pipelining loss (still there) from its
+timer-adaptation loss (gone); and ``adaptive_rate`` adapts the fountain
+overhead to the measured loss process (arXiv:2103.04247, the ROADMAP
+code-rate item), beating fixed-K CCP wherever erasures — not outages —
+dominate, most visibly on the burst sweep.
 
 Uncertified reps (horizon cap hit) are *dropped and counted* per point
 (``invalid``), never averaged.
 
-Anchors (checked by tests/test_simulator_dynamics.py at smaller scale):
-CCP/Best stays within ~1.5x across every sweep while Naive/Best crosses
-~2x, and naive_oracle sits between CCP and Naive.
+Anchors (checked by tests/test_simulator_dynamics.py and the smoke lane at
+smaller scale): CCP/Best stays within ~1.5x across every sweep while
+Naive/Best crosses ~2x, naive_oracle sits between CCP and Naive, and
+adaptive_rate/CCP < 1 at the lossy end of the burst sweep.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import simulator
+from repro.core import engine, simulator
 
-from .common import _stats, certified, emit
+from .common import _stats, certified, emit, policy_meta
 
 N = 50
 R = 1000
 MU_CHOICES = (1.0, 3.0, 9.0)
-MODES = ("ccp", "best", "naive", "naive_oracle")
+POLICIES = ("ccp", "best", "naive", "naive_oracle", "adaptive_rate")
+MODES = POLICIES  # legacy alias
 
 DROP_SWEEP = (0.0, 0.05, 0.1, 0.2, 0.3)
 # GE good->bad sweep at fixed recovery (p_good=0.25) and bad-state loss 0.9:
@@ -93,8 +100,8 @@ SWEEPS = {
 }
 
 
-def _mode_stats(out: dict) -> dict:
-    """Per-mode stats with uncertified reps dropped and counted."""
+def _policy_stats(out) -> dict:
+    """Per-policy stats with uncertified reps dropped and counted."""
     valid = certified(out, "fig_churn")
     return {
         **_stats(np.asarray(out["T"])[valid]),
@@ -105,9 +112,14 @@ def _mode_stats(out: dict) -> dict:
     }
 
 
+_mode_stats = _policy_stats  # legacy alias
+
+
 def run(reps: int = 40, sweeps=None, R: int = R, n_helpers: int = N,
-        shard: bool = False) -> dict:
+        shard: bool = False, policies=POLICIES) -> dict:
     sweeps = sweeps if sweeps is not None else dict(SWEEPS)
+    policies = tuple(policies)
+    eng = engine.Engine(shard=shard)
     keys = simulator.batch_keys(reps)
     rows = []
     summary = {}
@@ -119,45 +131,47 @@ def run(reps: int = 40, sweeps=None, R: int = R, n_helpers: int = N,
                    "N": n_helpers}
             if cfg.churn.ge_enabled:
                 row["ge_loss_rate"] = cfg.churn.ge_loss_rate
-            for mode in MODES:
-                row[mode] = _mode_stats(
-                    simulator.run_batch(keys, cfg, R, mode, shard=shard)
-                )
-            for mode in ("ccp", "naive", "naive_oracle"):
-                row[f"{mode}_vs_best"] = (
-                    row[mode]["mean"] / row["best"]["mean"]
-                )
+            for p in policies:
+                row[p] = _policy_stats(eng.run(cfg, p, keys, R))
+            if "best" in policies:
+                for p in policies:
+                    if p != "best":
+                        row[f"{p}_vs_best"] = (
+                            row[p]["mean"] / row["best"]["mean"]
+                        )
             sweep_rows.append(row)
         rows.extend(sweep_rows)
-        # Degradation of each mode across the sweep, relative to its own
+        # Degradation of each policy across the sweep, relative to its own
         # zero-churn-intensity delay (the graceful-vs-sharp comparison).
-        for m in MODES:
-            summary[f"{sweep_name}_{m}_degradation"] = (
-                sweep_rows[-1][m]["mean"] / sweep_rows[0][m]["mean"]
+        for p in policies:
+            summary[f"{sweep_name}_{p}_degradation"] = (
+                sweep_rows[-1][p]["mean"] / sweep_rows[0][p]["mean"]
             )
-        summary[f"{sweep_name}_ccp_vs_best_worst"] = max(
-            r["ccp_vs_best"] for r in sweep_rows)
-        summary[f"{sweep_name}_naive_vs_best_worst"] = max(
-            r["naive_vs_best"] for r in sweep_rows)
-        summary[f"{sweep_name}_naive_oracle_vs_best_worst"] = max(
-            r["naive_oracle_vs_best"] for r in sweep_rows)
+            if p != "best" and "best" in policies:
+                summary[f"{sweep_name}_{p}_vs_best_worst"] = max(
+                    r[f"{p}_vs_best"] for r in sweep_rows)
+        if "ccp" in policies and "adaptive_rate" in policies:
+            # The code-rate adaptation claim: at the lossy end of the sweep
+            # the adapted fountain overhead must not lose to fixed-K CCP.
+            summary[f"{sweep_name}_adaptive_rate_vs_ccp"] = (
+                sweep_rows[-1]["adaptive_rate"]["mean"]
+                / sweep_rows[-1]["ccp"]["mean"]
+            )
         summary[f"{sweep_name}_invalid_total"] = sum(
-            r[m]["invalid"] for r in sweep_rows for m in MODES)
+            r[p]["invalid"] for r in sweep_rows for p in policies)
     emit("fig_churn", rows,
-         derived=";".join(f"{k}={v:.3f}" for k, v in summary.items()))
-    return {"rows": rows, "summary": summary}
+         derived=";".join(f"{k}={v:.3f}" for k, v in summary.items()),
+         policies=policy_meta(policies))
+    return {"rows": rows, "summary": summary, "policies": policies}
 
 
 if __name__ == "__main__":
     out = run()
     for r in out["rows"]:
         axis = [k for k in ("drop_prob", "ge_p_bad", "p_cell") if k in r][0]
-        print(f"  {r['sweep']}:{axis}={r[axis]:.2f}: "
-              f"ccp={r['ccp']['mean']:.1f} best={r['best']['mean']:.1f} "
-              f"naive={r['naive']['mean']:.1f} "
-              f"oracle={r['naive_oracle']['mean']:.1f} "
-              f"(ccp/best={r['ccp_vs_best']:.2f}, "
-              f"naive/best={r['naive_vs_best']:.2f}, "
-              f"invalid={sum(r[m]['invalid'] for m in ('ccp', 'best', 'naive', 'naive_oracle'))})")
+        parts = " ".join(
+            f"{p}={r[p]['mean']:.1f}" for p in out["policies"])
+        print(f"  {r['sweep']}:{axis}={r[axis]:.2f}: {parts} "
+              f"(invalid={sum(r[p]['invalid'] for p in out['policies'])})")
     for k, v in out["summary"].items():
         print(f"  {k}: {v:.3f}")

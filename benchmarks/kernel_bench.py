@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fountain, simulator
+from repro.core import engine, fountain, simulator
 from repro.kernels.coded_matmul import coded_matmul, coded_matmul_ref
 from repro.kernels.coded_matmul.ops import flops as cm_flops
 from repro.kernels.flash_attention.ops import attention_flops
@@ -73,12 +73,13 @@ def run() -> dict:
             "flops": f, "bytes_flash": io, "bytes_naive": naive_bytes,
             "hbm_saving": 1 - io / naive_bytes,
         })
-    # --- batched vs sequential Monte-Carlo (simulator.run_batch) -----------
+    # --- batched vs sequential Monte-Carlo (engine.Engine) -----------------
     # Two regimes: fig5-style (N=10, per-rep horizons vary with the mu draw,
     # so the sequential loop keeps re-tracing per horizon bucket — the shared
     # bucketed horizon removes that entirely) and fig3-style (N=100, stable
     # horizon; the win is one dispatch instead of ``reps``).
     speedups = {}
+    eng = engine.Engine()
     for tag, cfg, R in (
         ("fig5", simulator.ScenarioConfig(N=10, scenario=2,
                                           rate_lo=0.1e6, rate_hi=0.2e6), 400),
@@ -91,13 +92,13 @@ def run() -> dict:
         # horizons vary with the mu draw, so one warm call only covers one
         # bucket; that recurring retrace cost is precisely what the shared
         # bucketed horizon removes.
-        batched = simulator.run_batch(keys, cfg, R, "ccp")
-        simulator.run_ccp(jax.random.PRNGKey(0), cfg, R)
+        batched = eng.run(cfg, "ccp", keys, R)
+        eng.run_one(jax.random.PRNGKey(0), cfg, "ccp", R)
         t0 = time.perf_counter()
-        batched = simulator.run_batch(keys, cfg, R, "ccp")
+        batched = eng.run(cfg, "ccp", keys, R)
         t_batch = time.perf_counter() - t0
         t0 = time.perf_counter()
-        seq_t = [simulator.run_ccp(keys[r], cfg, R)["T"]
+        seq_t = [eng.run_one(keys[r], cfg, "ccp", R)["T"]
                  for r in range(reps)]
         t_seq = time.perf_counter() - t0
         speedups[tag] = t_seq / max(t_batch, 1e-9)
@@ -116,13 +117,13 @@ def run() -> dict:
     # must be bitwise identical either way (per-rep lanes are independent).
     cfg, R, reps = simulator.ScenarioConfig(N=100, scenario=1), 2000, 40
     keys = simulator.batch_keys(reps)
-    un = simulator.run_batch(keys, cfg, R, "ccp")
-    sh = simulator.run_batch(keys, cfg, R, "ccp", shard=True)
+    un = eng.run(cfg, "ccp", keys, R)
+    sh = eng.run(cfg, "ccp", keys, R, shard=True)
     t0 = time.perf_counter()
-    un = simulator.run_batch(keys, cfg, R, "ccp")
+    un = eng.run(cfg, "ccp", keys, R)
     t_un = time.perf_counter() - t0
     t0 = time.perf_counter()
-    sh = simulator.run_batch(keys, cfg, R, "ccp", shard=True)
+    sh = eng.run(cfg, "ccp", keys, R, shard=True)
     t_sh = time.perf_counter() - t0
     shard_eq = bool(np.array_equal(un["T"], sh["T"]))
     shard_speedup = t_un / max(t_sh, 1e-9)

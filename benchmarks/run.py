@@ -18,6 +18,13 @@ Subset:          PYTHONPATH=src python -m benchmarks.run --only fig3,fig5
 Fast smoke:      PYTHONPATH=src python -m benchmarks.run --fast
 Test-lane smoke: PYTHONPATH=src python -m benchmarks.run --smoke --only fig_churn
 Device-sharded:  PYTHONPATH=src python -m benchmarks.run --shard --reps 64
+Policy subset:   PYTHONPATH=src python -m benchmarks.run --only fig_churn \
+                     --policies ccp,hcmm,adaptive_rate
+
+``--policies`` routes any subset of registered policies (see
+``repro.core.policies.names()``) through the figure sweeps; the ``--smoke``
+lane defaults to *every* registered policy so a policy that breaks under
+jit/vmap fails the fast test lane.
 """
 
 from __future__ import annotations
@@ -41,8 +48,14 @@ def main(argv=None) -> None:
                     help="override the Monte-Carlo rep count per point")
     ap.add_argument("--shard", action="store_true",
                     help="shard MC key batches over the local devices "
-                         "(simulator.run_batch(shard=True))")
+                         "(engine.Engine(shard=True))")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated registered policy names to sweep "
+                         "(default: per-figure defaults; --smoke defaults "
+                         "to every registered policy)")
     args = ap.parse_args(argv)
+
+    from repro.core import policies as policy_registry
 
     from . import (efficiency, fig3, fig4, fig5, fig_churn, kernel_bench,
                    overhead, roofline_report)
@@ -51,6 +64,17 @@ def main(argv=None) -> None:
     reps = args.reps if reps_explicit else (
         2 if args.smoke else (8 if args.fast else 40))
     shard = args.shard
+    if args.policies is not None:
+        swept = tuple(args.policies.split(","))
+        for p in swept:
+            policy_registry.get(p)  # fail loudly on typos, with known names
+    else:
+        # The smoke lane sweeps every registered policy through the churn
+        # figure so a policy that breaks under jit/vmap fails the fast lane.
+        swept = policy_registry.names() if args.smoke else None
+    churn_policies = {} if swept is None else dict(policies=swept)
+    fig_policies = {} if args.policies is None else dict(
+        policies=tuple(p for p in swept))
     if args.smoke:
         sweep = (500,)
         churn_kw = dict(
@@ -73,13 +97,16 @@ def main(argv=None) -> None:
     fig5_reps = reps if reps_explicit else max(reps // 2, 2 if small else 5)
     eff_reps = reps if reps_explicit else (min(reps, 4) if small else 20)
     jobs = {
-        "fig3": lambda: fig3.run(reps=reps, r_sweep=sweep, shard=shard),
-        "fig4": lambda: fig4.run(reps=reps, r_sweep=sweep, shard=shard),
+        "fig3": lambda: fig3.run(reps=reps, r_sweep=sweep, shard=shard,
+                                 **fig_policies),
+        "fig4": lambda: fig4.run(reps=reps, r_sweep=sweep, shard=shard,
+                                 **fig_policies),
         "fig5": lambda: fig5.run(reps=fig5_reps,
                                  r_sweep=(200, 400) if small
-                                 else (200, 400, 800, 1600), shard=shard),
+                                 else (200, 400, 800, 1600), shard=shard,
+                                 **fig_policies),
         "fig_churn": lambda: fig_churn.run(reps=reps, shard=shard,
-                                           **churn_kw),
+                                           **churn_policies, **churn_kw),
         "efficiency": lambda: efficiency.run(
             reps=eff_reps,
             R=400 if args.smoke else (2000 if args.fast else 8000),

@@ -1,6 +1,12 @@
 """The paper's primary contribution: Computation Control Protocol (CCP) —
 fountain-coded cooperative computation with dynamic, heterogeneity-aware
 task allocation — plus its TPU-native realizations (coded matmul, coded
-gradient aggregation, CCP-driven scheduling)."""
+gradient aggregation, CCP-driven scheduling).
 
-from . import baselines, ccp, fountain, simulator, theory  # noqa: F401
+Simulation entry point: :class:`repro.core.engine.Engine` drives any
+registered :mod:`repro.core.policies` plugin (ccp / best / naive /
+naive_oracle / uncoded_* / hcmm / adaptive_rate) through one vmapped,
+optionally device-sharded Monte-Carlo path."""
+
+from . import (baselines, ccp, engine, fountain, policies, simulator,  # noqa: F401
+               theory)

@@ -86,10 +86,15 @@ def hcmm_loads(R: int, mu, a) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 def _block_finish_times(cfg: ScenarioConfig, key, R: int, loads: np.ndarray,
-                        mu, a, rate) -> np.ndarray:
+                        mu, a, rate, M_override: int | None = None
+                        ) -> np.ndarray:
     """Finish time (last computed result at collector) per helper for a fixed
-    pre-assigned block of ``loads[n]`` packets, streaming back-to-back sends."""
-    M = int(loads.max())
+    pre-assigned block of ``loads[n]`` packets, streaming back-to-back sends.
+
+    ``M_override`` draws the packet tables at a fixed horizon (>= max load)
+    so results are comparable draw-for-draw with the policy engine's shared
+    horizon (tests pin the in-scan block policies against this path)."""
+    M = M_override if M_override is not None else int(loads.max())
     if M == 0:
         return np.zeros(cfg.N)
     beta, d_up, d_ack, d_down = draw_packet_tables(key, cfg, mu, a, rate, M, R)
@@ -111,21 +116,31 @@ def _block_finish_times(cfg: ScenarioConfig, key, R: int, loads: np.ndarray,
     return np.asarray(jnp.where(loads_j > 0, t_n, 0.0))
 
 
-def run_uncoded(key, cfg: ScenarioConfig, R: int, rule: str = "mean") -> Dict:
-    """Uncoded baseline: every helper must finish its block; T = max_n."""
+def run_uncoded(key, cfg: ScenarioConfig, R: int, rule: str = "mean",
+                M_override: int | None = None) -> Dict:
+    """Uncoded baseline: every helper must finish its block; T = max_n.
+
+    Sequential NumPy reference path; the vmapped/sharded equivalent is
+    ``engine.Engine().run(cfg, "uncoded_mean"|"uncoded_mu", keys, R)``.
+    """
     k_h, k_p = jax.random.split(key)
     mu, a, rate = draw_helpers(k_h, cfg)
     loads = uncoded_allocation(R, mu, a, rule)
-    t_n = _block_finish_times(cfg, k_p, R, loads, mu, a, rate)
+    t_n = _block_finish_times(cfg, k_p, R, loads, mu, a, rate, M_override)
     return dict(T=float(np.max(t_n)), loads=loads, mu=np.asarray(mu), a=np.asarray(a))
 
 
-def run_hcmm(key, cfg: ScenarioConfig, R: int) -> Dict:
-    """HCMM: completion when finished helpers' loads sum to >= R."""
+def run_hcmm(key, cfg: ScenarioConfig, R: int,
+             M_override: int | None = None) -> Dict:
+    """HCMM: completion when finished helpers' loads sum to >= R.
+
+    Sequential NumPy reference path; the vmapped/sharded equivalent is
+    ``engine.Engine().run(cfg, "hcmm", keys, R)``.
+    """
     k_h, k_p = jax.random.split(key)
     mu, a, rate = draw_helpers(k_h, cfg)
     loads = hcmm_loads(R, np.asarray(mu), np.asarray(a))
-    t_n = _block_finish_times(cfg, k_p, R, loads, mu, a, rate)
+    t_n = _block_finish_times(cfg, k_p, R, loads, mu, a, rate, M_override)
     order = np.argsort(t_n)
     agg = np.cumsum(loads[order])
     pos = int(np.searchsorted(agg, R))

@@ -1,0 +1,417 @@
+"""Policy-driven simulation engine: one entry point for every offloading
+policy.
+
+The engine owns the *scenario dynamics* — helper draws, per-packet
+link/compute timing, and the churn loss processes (phase outages,
+Gilbert–Elliott burst loss, correlated cell outages, slowdowns) — and
+threads a :class:`~repro.core.policies.base.Policy` through the per-packet
+``lax.scan``: the policy decides pacing (``next_load``), receipt handling
+(``on_computed``), loss reaction (``on_timeout``) and the completion rule
+(``finalize``).  Because the policy hooks are pure jnp functions, every
+registered policy — including the block baselines and the adaptive
+code-rate policy — runs jitted, vmapped over Monte-Carlo reps, and
+device-sharded through the exact same code path.
+
+Typical usage::
+
+    from repro.core import engine, policies, simulator
+
+    eng = engine.Engine()
+    keys = simulator.batch_keys(reps=40)
+    res = eng.run(cfg, "adaptive_rate", keys, R=2000)   # name or Policy
+    res.T, res.efficiency, res.valid                    # RunResult pytree
+
+The legacy string-dispatch surface (``simulator.run_batch(mode=...)``,
+``run_ccp/best/naive/naive_oracle``, ``simulate_stream(mode=...)``) is a
+thin deprecated shim over this module, pinned bit-for-bit by the golden
+tests in ``tests/test_policies.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ccp as ccp_mod
+from . import policies as policies_mod
+from . import simulator as sim
+
+__all__ = ["Engine", "RunResult", "policy_stream"]
+
+
+def _as_policy(policy) -> policies_mod.Policy:
+    if isinstance(policy, str):
+        return policies_mod.get(policy)
+    return policy
+
+
+# ---------------------------------------------------------------------------
+# The per-helper timeline scan (scenario dynamics x policy hooks)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "cfg_static", "churn_static")
+)
+def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
+                  churn_static=None, dyn=None, a=None, aux=None):
+    """Simulate M packets on every helper under ``policy``.
+
+    Returns ``(outs, psummary)``: ``outs`` is the dict of (N, M) trace
+    arrays (tr, idle, tx, arrive, beta, lost, backoff) plus ``tx_end``
+    (N,) — the send time of the first unsimulated packet — and
+    ``psummary`` is ``policy.summary(final_state)``.
+
+    cfg_static: hashable (Bx, Br, Back, alpha) tuple.
+    churn_static: ``ChurnConfig.static_key()`` — hashable (period,
+        max_backoff, outage_dist, ge_enabled, cell_enabled) — or the
+        legacy (period, max_backoff) 2-tuple (phase outages only), or
+        None for the static paper model.  When set, ``dyn`` (from
+        :func:`repro.core.simulator.draw_dynamics`) and ``a`` (N,)
+        runtime offsets must be provided.
+    aux: ``policy.prepare()`` output (per-rep traced pytree).
+    """
+    Bx, Br, Back, alpha = cfg_static
+    cfg = ccp_mod.CCPConfig(Bx=Bx, Br=Br, Back=Back, alpha=alpha)
+    N, M = beta.shape
+    aux = {} if aux is None else aux
+    churn = churn_static is not None
+    ge_on = cell_on = False
+    outage_dist = "phase"
+    max_backoff = None
+    if churn:
+        if len(churn_static) == 2:  # legacy direct callers (phase model)
+            period, max_backoff = churn_static
+        else:
+            period, max_backoff, outage_dist, ge_on, cell_on = churn_static
+        window = period * dyn["speed"].shape[1]
+
+    carry0 = dict(
+        tx=jnp.zeros(N),              # send time of current packet (Tx_{n,1}=0)
+        done_prev=jnp.zeros(N),
+        tr_prev=jnp.zeros(N),
+        pstate=policy.init(N),
+    )
+    xs = dict(
+        beta=beta.T, d_up=d_up.T, d_ack=d_ack.T, d_down=d_down.T,
+        i=jnp.arange(M),
+    )
+    if churn:
+        xs["drop"] = dyn["drop"].T
+    if ge_on:
+        carry0["ge_bad"] = dyn["ge_bad0"]
+        xs["ge_u_trans"] = dyn["ge_u_trans"].T
+        xs["ge_u_loss"] = dyn["ge_u_loss"].T
+
+    def step(carry, x):
+        tx = carry["tx"]
+        arrive = tx + x["d_up"]
+        start = jnp.maximum(arrive, carry["done_prev"])
+        if churn:
+            # Outage if the helper is down when the packet arrives or when
+            # it would start computing; degraded phases stretch the runtime
+            # (beta = a + eps/mu, so (beta-a)/speed rescales the random part).
+            if outage_dist == "phase":
+                is_up = (sim._phase_lookup(dyn["up"], arrive, period)
+                         & sim._phase_lookup(dyn["up"], start, period))
+            else:
+                is_up = ~(sim._interval_hit(dyn["out_start"], dyn["out_end"],
+                                            arrive, window)
+                          | sim._interval_hit(dyn["out_start"], dyn["out_end"],
+                                              start, window)).any(axis=1)
+            if cell_on:
+                in_cell = dyn["cell_mask"] & (
+                    sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
+                                      arrive, window)
+                    | sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
+                                        start, window)
+                )
+                is_up &= ~in_cell.any(axis=1)
+            sp = sim._phase_lookup(dyn["speed"], start, period)
+            beta_i = jnp.where(sp == 1.0, x["beta"], a + (x["beta"] - a) / sp)
+            lost = x["drop"] | ~is_up
+        else:
+            beta_i = x["beta"]
+            lost = jnp.zeros((N,), bool)
+        if ge_on:
+            # Gilbert–Elliott: loss by the current state, then the per-packet
+            # state transition (the chain advances even for packets already
+            # lost to an outage — the radio fades regardless).
+            p_bad, p_good, l_good, l_bad = dyn["ge_params"]
+            bad = carry["ge_bad"]
+            lost |= x["ge_u_loss"] < jnp.where(bad, l_bad, l_good)
+            ge_bad_next = jnp.where(
+                bad, x["ge_u_trans"] >= p_good, x["ge_u_trans"] < p_bad
+            )
+        received = ~lost
+        done_ok = start + beta_i
+        tr_ok = done_ok + x["d_down"]
+        # A lost packet never occupies the helper nor reaches the collector.
+        done = jnp.where(lost, carry["done_prev"], done_ok)
+        tr = jnp.where(lost, jnp.inf, tr_ok)
+        idle = jnp.where(
+            lost, 0.0, jnp.maximum(arrive - carry["done_prev"], 0.0)
+        )
+        rtt_ack = x["d_up"] + x["d_ack"]
+
+        ctx = policies_mod.StepCtx(
+            i=x["i"], n=N, tx=tx, arrive=arrive, start=start, beta=beta_i,
+            tr_ok=tr_ok, lost=lost, received=received, rtt_ack=rtt_ack,
+            d_up=x["d_up"], d_down=x["d_down"], d_ack=x["d_ack"],
+            tr_prev=carry["tr_prev"], cfg=cfg, max_backoff=max_backoff,
+            aux=aux,
+        )
+        pstate = policy.on_computed(carry["pstate"], ctx)
+        tx_next = policy.next_load(pstate, ctx)
+        if churn:
+            pstate, tx_retx = policy.on_timeout(pstate, ctx, tx_next)
+            tx_next = jnp.where(lost, tx_retx, tx_next)
+
+        new_carry = dict(
+            tx=tx_next, done_prev=done,
+            tr_prev=jnp.where(received, tr_ok, carry["tr_prev"]),
+            pstate=pstate,
+        )
+        if ge_on:
+            new_carry["ge_bad"] = ge_bad_next
+        b = policy.backoff(pstate)
+        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive, beta=beta_i,
+                   lost=lost,
+                   backoff=b if b is not None else jnp.ones(N))
+        return new_carry, out
+
+    final, outs = jax.lax.scan(step, carry0, xs)
+    res = {k: v.T for k, v in outs.items()}  # (N, M)
+    res["tx_end"] = final["tx"]
+    return res, policy.summary(final["pstate"])
+
+
+# ---------------------------------------------------------------------------
+# One Monte-Carlo rep (pure-jax core shared by the sequential, vmapped and
+# sharded runners)
+# ---------------------------------------------------------------------------
+
+def _sim_one(key, cfg, R: int, M: int, policy) -> Dict[str, jnp.ndarray]:
+    """Full single-rep pipeline as a traceable function of ``key``."""
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = sim.draw_helpers(k_h, cfg)
+    beta, d_up, d_ack, d_down = sim.draw_packet_tables(
+        k_p, cfg, mu, a, rate, M, R)
+    c = cfg.ccp_cfg(R)
+    cfg_static = (c.Bx, c.Br, c.Back, c.alpha)
+    aux = policy.prepare(cfg, R, c, mu, a, rate)
+    if cfg.churn is None:
+        outs, psum = policy_stream(beta, d_up, d_ack, d_down, policy=policy,
+                                   cfg_static=cfg_static, aux=aux)
+        tx_end = None
+    else:
+        k_c = jax.random.fold_in(key, 0xC0DE)
+        dyn = sim.draw_dynamics(k_c, cfg, M)
+        outs, psum = policy_stream(
+            beta, d_up, d_ack, d_down, policy=policy, cfg_static=cfg_static,
+            churn_static=cfg.churn.static_key(), dyn=dyn, a=a, aux=aux,
+        )
+        tx_end = outs["tx_end"]
+    kk = R + cfg.K(R)
+    t, valid = policy.finalize(outs, aux, cfg, R, kk, tx_end)
+    mask = policy.packet_mask(aux, cfg.N, M)
+    if mask is None:
+        tr_eff, idle_eff, beta_eff = outs["tr"], outs["idle"], outs["beta"]
+    else:
+        # Block policies: packets beyond the assigned block do not exist
+        # physically — exclude them from the per-helper statistics.
+        tr_eff = jnp.where(mask, outs["tr"], jnp.inf)
+        idle_eff = jnp.where(mask, outs["idle"], 0.0)
+        beta_eff = jnp.where(mask, outs["beta"], 0.0)
+    eff = sim.efficiency_measured(tr_eff, idle_eff, beta_eff, t)
+    # isfinite guard: when t is +inf (an uncompletable block-policy rep)
+    # the inf sentinels in tr_eff must not count as delivered packets.
+    r_n = (jnp.isfinite(tr_eff) & (tr_eff <= t)).sum(axis=1)
+    max_backoff = outs["backoff"].max(axis=1)
+    lost_frac = outs["lost"].mean(axis=1)
+    res = dict(T=t, valid=valid, efficiency=eff, r_n=r_n, mu=mu, a=a,
+               rate=rate, max_backoff=max_backoff, lost_frac=lost_frac)
+    for k in getattr(policy, "report_aux", ()):
+        res[f"x_{k}"] = aux[k]
+    for k, v in psum.items():
+        res[f"x_{k}"] = v
+    return res
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "policy"))
+def _sim_one_jit(key, cfg, R, M, policy):
+    return _sim_one(key, cfg, R, M, policy)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "policy"))
+def _sim_batch_jit(keys, cfg, R, M, policy):
+    return jax.vmap(lambda k: _sim_one(k, cfg, R, M, policy))(keys)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_batch_fn(cfg, R: int, M: int, policy, devs: tuple, batch: int):
+    """Jitted shard_map runner: the key batch is split over a 1-D 'data'
+    mesh of ``devs`` and each device vmaps its shard through ``_sim_one``
+    — per-rep lanes are independent, so no collectives and results are
+    identical to the single-device vmap."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from ..parallel import sharding as shd
+
+    mesh = shd.data_mesh(devs)
+    spec = shd.batch_spec(mesh, batch, extra_dims=1)
+    body = lambda k: jax.vmap(lambda kk: _sim_one(kk, cfg, R, M, policy))(k)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,),
+                   out_specs=PartitionSpec("data"), check_rep=False)
+    return jax.jit(fn)
+
+
+def _sim_batch_sharded(keys, cfg, R: int, M: int, policy, devices=None):
+    """Device-sharded batch: pad the key batch to a multiple of the device
+    count (padding reps are discarded after the run) and shard it over the
+    local device mesh."""
+    devs = tuple(devices) if devices is not None else tuple(jax.local_devices())
+    B = keys.shape[0]
+    pad = (-B) % len(devs)
+    keys_p = keys if pad == 0 else jnp.concatenate(
+        [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])]
+    )
+    out = _sharded_batch_fn(cfg, R, M, policy, devs, keys_p.shape[0])(keys_p)
+    return {k: v[:B] for k, v in out.items()}
+
+
+def _m_cap(cfg, kk: int, policy) -> int:
+    # Static: every helper streams back-to-back, so M = R+K always
+    # certifies.  Under churn a helper's M packets can include losses;
+    # block policies must cover the largest assigned block — leave headroom.
+    factor = policy.m_cap_factor
+    if factor is None:
+        factor = 1 if cfg.churn is None else 4
+    return factor * kk
+
+
+# ---------------------------------------------------------------------------
+# RunResult + Engine
+# ---------------------------------------------------------------------------
+
+_CORE_FIELDS = ("T", "valid", "efficiency", "r_n", "mu", "a", "rate",
+                "max_backoff", "lost_frac")
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=list(_CORE_FIELDS) + ["extras"],
+    meta_fields=["M", "policy"],
+)
+@dataclasses.dataclass
+class RunResult:
+    """Structured result of ``Engine.run`` over a key batch of B reps.
+
+    T (B,) completion times; valid (B,) certification mask (False: the
+    horizon cap was hit before the completion time could be certified —
+    the rep MUST be dropped and counted, never averaged); efficiency /
+    r_n / mu / a / rate / max_backoff / lost_frac (B, N) per-helper
+    statistics; M the shared horizon actually used; policy the registry
+    name; extras the policy trace (e.g. ``loads`` for the block
+    baselines, ``p_hat`` for ``adaptive_rate``).
+    """
+
+    T: np.ndarray
+    valid: np.ndarray
+    efficiency: np.ndarray
+    r_n: np.ndarray
+    mu: np.ndarray
+    a: np.ndarray
+    rate: np.ndarray
+    max_backoff: np.ndarray
+    lost_frac: np.ndarray
+    extras: Dict[str, np.ndarray]
+    M: int
+    policy: str
+
+    # dict-style access keeps the legacy ``run_batch`` consumers (and the
+    # shared benchmark helpers) working on either representation.
+    def __getitem__(self, key):
+        d = self.as_dict()
+        return d[key]
+
+    def keys(self):
+        return self.as_dict().keys()
+
+    def as_dict(self) -> Dict[str, np.ndarray]:
+        d = {f: getattr(self, f) for f in _CORE_FIELDS}
+        d.update(self.extras)
+        d["M"] = self.M
+        return d
+
+
+class Engine:
+    """Single entry point for policy-driven Monte-Carlo simulation.
+
+    ``Engine.run(cfg, policy, keys, R)`` vmaps the whole per-rep pipeline
+    (helper draw -> packet tables -> policy-driven stream scan -> policy
+    completion rule) over a batch of PRNG keys with one shared,
+    power-of-two-bucketed horizon M and a single certification pass: if
+    any rep is uncertified the shared horizon doubles and the whole batch
+    re-runs (one extra compile, amortized across the sweep).  With
+    ``shard=True`` the key batch is additionally split across the local
+    devices through ``shard_map`` on a 1-D 'data' mesh (padded to a
+    device-count multiple); per-rep lanes never communicate, so sharded
+    results are bitwise identical to the unsharded vmap.
+    """
+
+    def __init__(self, shard: bool = False, devices=None):
+        self.shard = shard
+        self.devices = devices
+
+    def run(self, cfg, policy, keys, R: int, *,
+            M_override: Optional[int] = None,
+            shard: Optional[bool] = None, devices=None) -> RunResult:
+        """Run ``policy`` (a registry name or Policy instance) over a key
+        batch; returns a :class:`RunResult`."""
+        policy = _as_policy(policy)
+        shard = self.shard if shard is None else shard
+        devices = self.devices if devices is None else devices
+        keys = jnp.asarray(keys)
+        kk = R + cfg.K(R)
+        cap = _m_cap(cfg, kk, policy)
+        M = M_override if M_override is not None else sim._horizon_shared(cfg, R)
+        M = min(M, cap)
+        for _ in range(8):
+            if shard:
+                out = _sim_batch_sharded(keys, cfg, R, M, policy, devices)
+            else:
+                out = _sim_batch_jit(keys, cfg, R, M, policy)
+            if bool(out["valid"].all()) or M >= cap or M_override is not None:
+                break
+            M = min(M * 2, cap)
+        res = {k: np.asarray(v) for k, v in out.items()}
+        extras = {k[2:]: v for k, v in res.items() if k.startswith("x_")}
+        core = {k: v for k, v in res.items() if not k.startswith("x_")}
+        return RunResult(M=M, policy=policy.name, extras=extras, **core)
+
+    def run_one(self, key, cfg, policy, R: int, *,
+                M_override: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Sequential single-rep runner (grows the horizon per draw);
+        mirrors the legacy ``simulator._run_mode`` contract."""
+        policy = _as_policy(policy)
+        k_h, _ = jax.random.split(key)
+        mu, a, _rate = sim.draw_helpers(k_h, cfg)
+        kk = R + cfg.K(R)
+        cap = _m_cap(cfg, kk, policy)
+        M = M_override if M_override is not None else sim._horizon(cfg, mu, a, R)
+        M = min(M, cap)
+        for _ in range(8):  # grow horizon until completion is certified
+            out = _sim_one_jit(key, cfg, R, M, policy)
+            if bool(out["valid"]) or M >= cap or M_override is not None:
+                break
+            M = min(M * 2, cap)
+        res = {k: np.asarray(v) for k, v in out.items()}
+        res["T"] = float(res["T"])
+        res["M"] = M
+        return res

@@ -1,0 +1,34 @@
+"""First-class offloading policies for the simulation engine.
+
+Every policy is a frozen-dataclass plugin implementing the
+:class:`~repro.core.policies.base.Policy` protocol and registered under a
+string name; :func:`get`/:func:`names` are the registry surface used by
+``Engine.run``, the ``run_batch(mode=...)`` compat shims, and the
+benchmark ``--policies`` flag.
+
+Built-ins: ``ccp`` (Algorithm 1), ``best`` (oracle TTI), ``naive`` /
+``naive_oracle`` (stop-and-wait with static / oracle ARQ timer),
+``uncoded_mean`` / ``uncoded_mu`` and ``hcmm`` (block baselines, ported
+from the sequential NumPy path into the vmapped scan), and
+``adaptive_rate`` (measured-loss code-rate adaptation).
+
+See ``docs/policies.md`` for the protocol contract and a worked example
+of registering a custom policy.
+"""
+
+from .base import RING, Policy, StepCtx, get, names, register  # noqa: F401
+
+# Importing the modules registers the built-ins.
+from . import adaptive_rate, best, ccp, hcmm, naive, uncoded  # noqa: F401, E402
+from .adaptive_rate import AdaptiveRatePolicy  # noqa: F401
+from .best import BestPolicy  # noqa: F401
+from .ccp import CCPPolicy  # noqa: F401
+from .hcmm import HCMMPolicy  # noqa: F401
+from .naive import NaivePolicy  # noqa: F401
+from .uncoded import UncodedPolicy  # noqa: F401
+
+__all__ = [
+    "RING", "Policy", "StepCtx", "get", "names", "register",
+    "CCPPolicy", "BestPolicy", "NaivePolicy", "UncodedPolicy",
+    "HCMMPolicy", "AdaptiveRatePolicy",
+]

@@ -1,0 +1,169 @@
+"""First-class offloading policies: protocol, step context, and registry.
+
+A :class:`Policy` packages everything that distinguishes one offloading
+strategy from another — when to send the next packet, how to react to a
+computed-packet receipt or a loss, and how to declare the task complete —
+while the *scenario dynamics* (helper draws, link/compute timing, churn)
+stay in :mod:`repro.core.engine`.  The engine's ``lax.scan`` step calls the
+policy hooks with a :class:`StepCtx`, so every policy runs jitted, vmapped
+over Monte-Carlo reps, and device-sharded through the same code path.
+
+Protocol contract (all hooks must be pure and trace-compatible — jnp ops
+only, no Python branches on traced values):
+
+``prepare(cfg, R, ccp_cfg, mu, a, rate) -> aux``
+    Per-rep auxiliary pytree computed once before the stream from the
+    helper draw (e.g. the Naive ARQ timer, the uncoded/HCMM block loads).
+    Traced; must be deterministic in its inputs.
+``init(n) -> state``
+    Per-helper policy state pytree carried through the scan.
+``on_computed(state, ctx) -> state``
+    Process the (possible) receipt of packet ``ctx.i``'s computed result.
+    ``ctx.received`` masks helpers whose packet actually arrived.
+``next_load(state, ctx) -> tx_next``
+    The pacing decision: the send time of packet ``i+1`` per helper (N,).
+``on_timeout(state, ctx, tx_next) -> (state, tx_retx)``
+    Only invoked under churn.  React to lost packets (``ctx.lost``) and
+    return the retransmission send time; the engine applies it as
+    ``where(lost, tx_retx, tx_next)``.  Default: no reaction.
+``finalize(outs, aux, cfg, R, kk, tx_end) -> (T, valid)``
+    Completion rule.  Default: the fountain-coded (R+K)-th order statistic
+    (:func:`repro.core.simulator.completion_time`).  Block-assignment
+    policies override (every/enough helpers must finish their block).
+``packet_mask(aux, n, m) -> (N, M) bool | None``
+    Which simulated packets physically exist (block policies send only
+    ``loads[n]``); ``None`` means all.  Masked packets are excluded from
+    the per-helper efficiency/contribution statistics.
+``backoff(state) -> (N,) | None``
+    Current timeout-backoff factor for the trace (None -> ones).
+``summary(state) -> dict``
+    Per-helper scalars from the final policy state, surfaced in
+    :class:`repro.core.engine.RunResult` extras (e.g. ``adaptive_rate``'s
+    measured loss estimate).
+
+Policies are frozen dataclasses (hashable) so a policy instance can be a
+static jit argument; per-rep data must flow through ``aux``/``state``,
+never through instance attributes.
+
+Registry: ``register(cls)`` adds a policy class under its ``name``;
+``get(name)`` instantiates; ``names()`` lists.  Unknown names raise with
+the known list, so a typo in ``--policies`` fails loudly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["RING", "StepCtx", "Policy", "register", "get", "names"]
+
+RING = 16  # ring-buffer slots for in-flight (Tr, TTI) pairs
+
+
+@dataclasses.dataclass
+class StepCtx:
+    """Per-packet step context handed to the policy hooks.
+
+    All array fields are (N,) slices for packet ``i``; the ctx never
+    crosses a jit boundary (it is built and consumed inside one traced
+    scan step), so it needs no pytree registration.
+    """
+
+    i: jnp.ndarray          # packet index (scalar)
+    n: int                  # helper count
+    tx: jnp.ndarray         # send time of packet i
+    arrive: jnp.ndarray     # uplink arrival time
+    start: jnp.ndarray      # compute start (FIFO queue)
+    beta: jnp.ndarray       # effective runtime (churn-scaled)
+    tr_ok: jnp.ndarray      # would-be result-arrival time if not lost
+    lost: jnp.ndarray       # bool: packet lost (churn)
+    received: jnp.ndarray   # bool: ~lost
+    rtt_ack: jnp.ndarray    # measured receipt-ACK RTT sample
+    d_up: jnp.ndarray       # uplink delay of packet i
+    d_down: jnp.ndarray     # result downlink delay
+    d_ack: jnp.ndarray      # ACK downlink delay
+    tr_prev: jnp.ndarray    # Tr of the previous *received* packet
+    cfg: object             # repro.core.ccp.CCPConfig
+    max_backoff: Optional[float]  # churn backoff cap (None when static)
+    aux: dict               # policy.prepare() output
+
+
+class Policy:
+    """Base policy: every hook has the neutral default (see module doc)."""
+
+    name: str = "base"
+    version: int = 1
+    #: horizon-cap multiple of R+K (None -> engine default: 1 static/4 churn)
+    m_cap_factor: Optional[int] = None
+
+    def prepare(self, cfg, R: int, ccp_cfg, mu, a, rate) -> dict:
+        return {}
+
+    def init(self, n: int):
+        return {}
+
+    def on_computed(self, state, ctx: StepCtx):
+        return state
+
+    def next_load(self, state, ctx: StepCtx) -> jnp.ndarray:
+        raise NotImplementedError(f"{type(self).__name__}.next_load")
+
+    def on_timeout(self, state, ctx: StepCtx, tx_next) -> Tuple[object, jnp.ndarray]:
+        return state, tx_next
+
+    def finalize(self, outs, aux, cfg, R: int, kk: int, tx_end):
+        from ..simulator import completion_time  # lazy: avoids import cycle
+        return completion_time(outs["tr"], kk, tx_end=tx_end)
+
+    def packet_mask(self, aux, n: int, m: int):
+        return None
+
+    def backoff(self, state):
+        return None
+
+    def summary(self, state) -> dict:
+        return {}
+
+    def __repr__(self) -> str:  # registry name is the canonical identity
+        return f"<policy {self.name!r} v{self.version}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], Policy]] = {}
+
+
+def register(name_or_cls=None, *, factory: Optional[Callable[[], Policy]] = None):
+    """Register a policy class (``@register``) or a named factory
+    (``register("uncoded_mu", factory=lambda: UncodedPolicy(rule="mu"))``)."""
+    if isinstance(name_or_cls, str):
+        name = name_or_cls
+        if factory is None:
+            raise ValueError("register(name, ...) requires factory=")
+        _REGISTRY[name] = factory
+        return factory
+    cls = name_or_cls
+
+    def _decorate(cls):
+        _REGISTRY[cls.name] = cls
+        return cls
+
+    return _decorate(cls) if cls is not None else _decorate
+
+
+def get(name: str) -> Policy:
+    """Instantiate the registered policy ``name``; unknown names raise with
+    the full known list (the ``--policies`` fail-loudly contract)."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown policy {name!r}; known policies: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]()
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,102 @@
+"""CCP (Algorithm 1) as a first-class policy.
+
+The arithmetic is the paper-faithful port of the former ``mode="ccp"``
+branch of ``simulate_stream``: eq. (8) pacing from the ring-buffered
+``E[beta]`` estimate in effect at the send instant, and — under churn —
+the lines 13-14 timeout/backoff path.  The golden-equivalence tests pin
+this bit-for-bit against the pre-redesign string dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .. import ccp as ccp_mod
+from .base import RING, Policy, StepCtx, register
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class CCPPolicy(Policy):
+    """Algorithm 1: estimated TTI with ring-buffer feedback delay."""
+
+    name = "ccp"
+    version = 1
+
+    def init(self, n: int):
+        return dict(
+            est=ccp_mod.init_state(n),
+            ring_tr=jnp.full((n, RING), jnp.inf),
+            ring_tti=jnp.zeros((n, RING)),
+        )
+
+    def on_computed(self, state, ctx: StepCtx):
+        est, _tti_i = ccp_mod.on_computed(
+            state["est"], ctx.cfg, ctx.tx, ctx.tr_ok, ctx.tr_prev,
+            ctx.rtt_ack, active=ctx.received,
+        )
+        slot = ctx.i % RING
+        ring_tr = state["ring_tr"].at[:, slot].set(
+            jnp.where(ctx.received, ctx.tr_ok, jnp.inf)
+        )
+        ring_tti = state["ring_tti"].at[:, slot].set(est.e_beta)
+        return dict(state, est=est, ring_tr=ring_tr, ring_tti=ring_tti)
+
+    def _select(self, state, tx):
+        """E[beta] estimate in effect when planning the next send: the ring
+        entry with the largest Tr among those with Tr <= tx (the latest
+        information that had arrived by the current send instant)."""
+        valid = state["ring_tr"] <= tx[:, None]
+        masked = jnp.where(valid, state["ring_tr"], -jnp.inf)
+        sel = jnp.argmax(masked, axis=1)
+        has = valid.any(axis=1)
+        e_beta_sel = jnp.take_along_axis(
+            state["ring_tti"], sel[:, None], axis=1)[:, 0]
+        return has, e_beta_sel
+
+    def _tti_scale(self, state, ctx: StepCtx):
+        """Multiplier on the estimated TTI (None = 1); the adaptive-rate
+        subclass compensates the measured loss rate here."""
+        return None
+
+    def next_load(self, state, ctx: StepCtx) -> jnp.ndarray:
+        # eq. (8), causal form: tx_{i+1} = min(Tr_i, tx_i + E[beta]),
+        # scaled by the timeout backoff factor (1 when no timeouts).
+        # Bootstrap: before any computed packet has returned by tx, the
+        # collector has no estimate -> stop-and-wait on this packet.
+        has, e_beta_sel = self._select(state, ctx.tx)
+        tti_est = e_beta_sel * state["est"].tti_backoff
+        scale = self._tti_scale(state, ctx)
+        if scale is not None:
+            tti_est = tti_est * scale
+        return jnp.where(
+            has, jnp.minimum(ctx.tr_ok, ctx.tx + tti_est), ctx.tr_ok
+        )
+
+    def _deadline(self, state, ctx: StepCtx):
+        """Alg. 1 line 14 loss-detection latency: TO = 2*(TTI + RTT^data)
+        with the *pre-doubling* TTI.  ``rtt_eff`` floors the RTT term with
+        this packet's scaled ACK sample so helpers that never responded
+        yet still have a finite deadline."""
+        est = state["est"]
+        has, e_beta_sel = self._select(state, ctx.tx)
+        rtt_eff = jnp.maximum(est.rtt_data, ctx.cfg.data_scale * ctx.rtt_ack)
+        tti_pre = jnp.where(has, e_beta_sel, rtt_eff) * est.tti_backoff
+        return ccp_mod.timeout_deadline(est.replace(rtt_data=rtt_eff), tti_pre)
+
+    def on_timeout(self, state, ctx: StepCtx, tx_next):
+        # Alg. 1 lines 13-14 for a lost packet: the loss is detected when
+        # TO elapses, the stream resumes then, and the backoff doubles
+        # (capped) for the following sends.  Consecutive losses therefore
+        # space out geometrically and a receipt (on_computed) resets the
+        # backoff — so a helper that rejoins is re-ramped.
+        deadline = self._deadline(state, ctx)
+        est = ccp_mod.on_timeout(
+            state["est"], ctx.lost, max_backoff=ctx.max_backoff
+        )
+        return dict(state, est=est), ctx.tx + deadline
+
+    def backoff(self, state):
+        return state["est"].tti_backoff

@@ -1,0 +1,73 @@
+"""HCMM baseline (arXiv:1701.05973, Reisizadeh et al.) as an in-scan policy.
+
+Each helper gets a fixed block of MDS-coded rows, sized by the
+asymptotically-optimal load; the collector finishes when the loads of
+*fully finished* helpers sum to >= R.  Load solver (vectorized Newton,
+trace-compatible): helper n's per-time expected useful rate is
+``rho(lmbda) = lmbda * (1 - e^{mu a - mu/lmbda})``; the optimum ``lmbda*``
+solves ``ln(1 + u + mu*a) = u`` with ``u = mu/lmbda - mu*a``, then
+``tau* = R / sum_n rho_n(lmbda_n*)`` and ``ell_n = lmbda_n* tau*``.
+
+Ported from the sequential NumPy path in :mod:`repro.core.baselines` so
+the baseline runs vmapped/sharded through the same engine as CCP; the
+stream/timing model is shared with :class:`~.uncoded.UncodedPolicy`
+(back-to-back uplink, no ARQ), only the completion rule differs — partial
+redundancy lets HCMM survive slow helpers, and under churn a helper whose
+block lost a packet simply never counts toward the R-row threshold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import StepCtx, register
+from .uncoded import UncodedPolicy, block_finish_times, largest_remainder_round
+
+
+def u_star(mu_a):
+    """Solve ``ln(1 + u + mu*a) = u`` for u > 0, elementwise (Newton with
+    the same iteration as the NumPy solver; converged lanes are at a fixed
+    point, so extra iterations are no-ops)."""
+
+    def body(_, u):
+        f = jnp.log1p(u + mu_a) - u
+        fp = 1.0 / (1.0 + u + mu_a) - 1.0
+        u_new = u - f / fp
+        return jnp.where(u_new <= 0, u / 2.0, u_new)
+
+    return jax.lax.fori_loop(0, 64, body, jnp.maximum(mu_a, 1.0))
+
+
+def hcmm_loads(R, mu, a):
+    """HCMM asymptotically-optimal per-helper integer loads (traced)."""
+    mu_a = mu * a
+    u = u_star(mu_a)
+    lam = mu / (u + mu_a)
+    rho = lam * (1.0 - jnp.exp(-u))
+    tau = R / rho.sum()
+    loads = lam * tau
+    return largest_remainder_round(loads, jnp.ceil(loads.sum()))
+
+
+@register
+@dataclasses.dataclass(frozen=True)
+class HCMMPolicy(UncodedPolicy):
+    """Fixed MDS blocks, completion at aggregate finished load >= R."""
+
+    name = "hcmm"
+    version = 1
+
+    def prepare(self, cfg, R: int, ccp_cfg, mu, a, rate) -> dict:
+        return {"loads": hcmm_loads(R, mu, a)}
+
+    def finalize(self, outs, aux, cfg, R: int, kk: int, tx_end):
+        loads = aux["loads"]
+        t_n = block_finish_times(outs, loads)
+        order = jnp.argsort(t_n)
+        agg = jnp.cumsum(loads[order])
+        pos = jnp.clip(jnp.searchsorted(agg, R), 0, loads.shape[0] - 1)
+        valid = loads.max() <= outs["tr"].shape[1]
+        return t_n[order][pos], valid

@@ -1,0 +1,95 @@
+"""Uncoded baseline (paper §6) as an in-scan policy.
+
+``r_n`` *uncoded* packets are pre-assigned to helper ``n`` (summing to
+exactly R — no coding, so *every* helper must finish its block).  Two
+allocation rules from the paper: proportional to 1/E[beta_n] ('mean') and
+proportional to mu_n ('mu').
+
+Ported from the sequential NumPy path in :mod:`repro.core.baselines` into
+the engine scan, so the baseline runs vmapped over Monte-Carlo reps and
+device-sharded for the first time.  The stream is back-to-back uplink
+serialization (tx_{i+1} = tx_i + d_up_i, i.e. arrive = cumsum(d_up)), the
+completion rule is ``max_n Tr_{n, loads_n}``, and a lost packet (churn)
+makes its helper's block — hence the whole task — unfinishable (no ARQ,
+no coding: T = inf), which is exactly the brittleness CCP's fountain
+coding removes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .base import Policy, StepCtx, register
+
+
+def largest_remainder_round(loads, total):
+    """Trace-compatible largest-remainder rounding: non-negative real
+    ``loads`` -> int32 loads summing exactly to ``total`` (traced scalar
+    ok).  Ties broken by helper index (stable argsort), matching the NumPy
+    :func:`repro.core.theory.largest_remainder_round` up to tie order."""
+    base = jnp.floor(loads)
+    short = (jnp.round(total) - base.sum()).astype(jnp.int32)
+    frac = loads - base
+    order = jnp.argsort(-frac)
+    bump = (jnp.arange(loads.shape[0]) < short).astype(base.dtype)
+    add = jnp.zeros_like(base).at[order].set(bump)
+    return (base + add).astype(jnp.int32)
+
+
+def block_finish_times(outs, loads):
+    """Per-helper block finish time from the scan outputs: the Tr of the
+    last assigned packet, or +inf if any packet of the block was lost
+    (churn; there is no retransmission), or 0 for an empty block."""
+    tr = outs["tr"]
+    m = tr.shape[1]
+    mask = jnp.arange(m)[None, :] < loads[:, None]
+    idx = jnp.clip(loads - 1, 0, m - 1)
+    t_last = jnp.take_along_axis(tr, idx[:, None], axis=1)[:, 0]
+    lost_any = (mask & ~jnp.isfinite(tr)).any(axis=1)
+    return jnp.where(
+        loads > 0, jnp.where(lost_any, jnp.inf, t_last), 0.0
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class UncodedPolicy(Policy):
+    rule: str = "mean"
+    version = 1
+    m_cap_factor = 4
+    report_aux = ("loads",)
+
+    @property
+    def name(self) -> str:
+        return f"uncoded_{self.rule}"
+
+    def prepare(self, cfg, R: int, ccp_cfg, mu, a, rate) -> dict:
+        if self.rule == "mean":
+            w = 1.0 / (a + 1.0 / mu)
+        elif self.rule == "mu":
+            w = mu
+        else:
+            raise ValueError(f"unknown uncoded rule {self.rule!r}")
+        return {"loads": largest_remainder_round(R * w / w.sum(), R)}
+
+    def next_load(self, state, ctx: StepCtx):
+        # Back-to-back uplink: send packet i+1 the moment packet i's
+        # transmission finishes (arrive_i = cumsum(d_up)_i).
+        return ctx.tx + ctx.d_up
+
+    def on_timeout(self, state, ctx: StepCtx, tx_next):
+        # No ARQ: a lost packet is simply gone; keep streaming the block.
+        return state, ctx.tx + ctx.d_up
+
+    def packet_mask(self, aux, n: int, m: int):
+        return jnp.arange(m)[None, :] < aux["loads"][:, None]
+
+    def finalize(self, outs, aux, cfg, R: int, kk: int, tx_end):
+        t_n = block_finish_times(outs, aux["loads"])
+        valid = aux["loads"].max() <= outs["tr"].shape[1]
+        return t_n.max(), valid
+
+
+register("uncoded_mean", factory=UncodedPolicy)
+register("uncoded_mu", factory=lambda: UncodedPolicy(rule="mu"))

@@ -79,32 +79,32 @@ so helpers that rejoin are re-ramped.  ``churn=None`` (default) runs the
 exact static paper model, and a ``ChurnConfig`` with every loss knob at
 zero is bit-for-bit identical to it.
 
-Batched Monte-Carlo (``run_batch``)
------------------------------------
-``run_batch(keys, cfg, R, mode)`` vmaps the whole per-rep pipeline (helper
-draw -> packet tables -> stream scan -> order statistic) over a batch of
-PRNG keys with one shared, power-of-two-bucketed horizon ``M`` and a single
-certification pass: if any rep's order statistic is uncertified the shared
-horizon doubles and the whole batch re-runs (one extra compile, amortized
-across the sweep).  Typical usage::
+Policy engine (PR 3)
+--------------------
+The per-mode logic that used to live in string branches here is now a set
+of first-class :mod:`repro.core.policies` plugins driven by
+:class:`repro.core.engine.Engine` — one scan, one vmapped/sharded
+Monte-Carlo path for every policy (CCP, Best, Naive, the uncoded/HCMM
+block baselines, and the adaptive code-rate policy).  Typical usage::
 
+    from repro.core import engine, simulator
     keys = simulator.batch_keys(reps=40, seed0=0)
-    out = simulator.run_batch(keys, cfg, R=2000, mode="ccp")
-    out["T"]           # (reps,) completion times
-    out["efficiency"]  # (reps, N) per-helper measured efficiency
+    res = engine.Engine().run(cfg, "ccp", keys, R=2000)
+    res.T            # (reps,) completion times
+    res.efficiency   # (reps, N) per-helper measured efficiency
 
-This replaces a Python loop of ``reps`` jitted calls with one vmapped call
-and is the engine behind ``benchmarks/fig3|4|5|churn``.  With
-``shard=True`` the key batch is additionally split across the local
-devices through ``shard_map`` on a 1-D 'data' mesh (padded to a
-device-count multiple); per-rep lanes never communicate, so the sharded
-results are identical to the unsharded vmap.
+The mode-string surface below (``run_batch(mode=...)``, ``run_ccp`` /
+``run_best`` / ``run_naive`` / ``run_naive_oracle``, and
+``simulate_stream(mode=...)``) is kept as thin deprecated shims over the
+engine, pinned bit-for-bit by golden tests; ``shard=True`` still splits
+the key batch over the local devices through ``shard_map``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -113,6 +113,7 @@ import numpy as np
 
 from . import ccp as ccp_mod
 from . import theory
+from .policies.base import RING  # noqa: F401  (re-export: compat)
 
 __all__ = [
     "ChurnConfig",
@@ -131,8 +132,6 @@ __all__ = [
     "KEY_SCHEDULE",
     "RING",
 ]
-
-RING = 16  # ring-buffer slots for in-flight (Tr, TTI) pairs
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +159,11 @@ class ChurnConfig:
     outage_mean: mean outage duration in seconds for the duration laws.
     outage_sigma: log-std of the log-normal duration law.
     ge_p_bad:   Gilbert–Elliott good->bad transition prob per packet
-                (0 disables the GE chain entirely).
+                (0 disables the GE chain entirely).  Each ``ge_*`` knob is
+                a scalar or a tuple of per-class values (heterogeneous GE:
+                fast/slow faders in one cell) — tuples must share one
+                length C and scalars broadcast; every helper is assigned a
+                class uniformly at random in :func:`draw_dynamics`.
     ge_p_good:  GE bad->good transition prob per packet.
     ge_loss_good / ge_loss_bad: per-packet loss prob in each GE state.
     p_cell:     per-phase prob a correlated whole-cell outage event starts.
@@ -177,12 +180,14 @@ class ChurnConfig:
     outage_dist: str = "phase"
     outage_mean: float = 5.0
     outage_sigma: float = 0.5
-    ge_p_bad: float = 0.0
-    ge_p_good: float = 0.25
-    ge_loss_good: float = 0.0
-    ge_loss_bad: float = 1.0
+    ge_p_bad: float | Tuple[float, ...] = 0.0
+    ge_p_good: float | Tuple[float, ...] = 0.25
+    ge_loss_good: float | Tuple[float, ...] = 0.0
+    ge_loss_bad: float | Tuple[float, ...] = 1.0
     p_cell: float = 0.0
     cell_frac: float = 0.5
+
+    _GE_KNOBS = ("ge_p_bad", "ge_p_good", "ge_loss_good", "ge_loss_bad")
 
     def __post_init__(self):
         if self.outage_dist not in ("phase", "geometric", "lognormal"):
@@ -190,10 +195,43 @@ class ChurnConfig:
                 f"outage_dist must be 'phase', 'geometric' or 'lognormal', "
                 f"got {self.outage_dist!r}"
             )
+        # Normalize list-valued GE knobs to (hashable) tuples and check the
+        # per-class lengths agree.
+        lengths = set()
+        for k in self._GE_KNOBS:
+            v = getattr(self, k)
+            if isinstance(v, list):
+                v = tuple(v)
+                object.__setattr__(self, k, v)
+            if isinstance(v, tuple):
+                lengths.add(len(v))
+        if len(lengths) > 1:
+            raise ValueError(
+                f"tuple-valued ge_* knobs must share one class count, got "
+                f"lengths {sorted(lengths)}"
+            )
+
+    @property
+    def ge_classes(self) -> int:
+        """Number of heterogeneous GE classes (1 = homogeneous)."""
+        for k in self._GE_KNOBS:
+            v = getattr(self, k)
+            if isinstance(v, tuple):
+                return len(v)
+        return 1
+
+    def ge_class_params(self) -> np.ndarray:
+        """(4, C) per-class (p_bad, p_good, loss_good, loss_bad) array with
+        scalar knobs broadcast across the C classes."""
+        c = self.ge_classes
+        return np.stack([
+            np.broadcast_to(np.asarray(getattr(self, k), dtype=np.float64), (c,))
+            for k in self._GE_KNOBS
+        ])
 
     @property
     def ge_enabled(self) -> bool:
-        return self.ge_p_bad > 0.0
+        return float(np.max(self.ge_p_bad)) > 0.0
 
     @property
     def cell_enabled(self) -> bool:
@@ -201,15 +239,19 @@ class ChurnConfig:
 
     @property
     def ge_stationary_bad(self) -> float:
-        """Stationary P(bad) of the GE chain (0 when disabled)."""
-        denom = self.ge_p_bad + self.ge_p_good
-        return self.ge_p_bad / denom if denom > 0 else 0.0
+        """Stationary P(bad) of the GE chain (0 when disabled); for
+        heterogeneous classes, the uniform-over-classes average."""
+        pb, pg, _, _ = self.ge_class_params()
+        denom = pb + pg
+        return float(np.mean(np.where(denom > 0, pb / np.where(denom > 0, denom, 1.0), 0.0)))
 
     @property
     def ge_loss_rate(self) -> float:
-        """Stationary marginal per-packet GE loss rate."""
-        pb = self.ge_stationary_bad
-        return pb * self.ge_loss_bad + (1.0 - pb) * self.ge_loss_good
+        """Stationary marginal per-packet GE loss rate (class-averaged)."""
+        pb_t, pg, lg, lb = self.ge_class_params()
+        denom = pb_t + pg
+        pb = np.where(denom > 0, pb_t / np.where(denom > 0, denom, 1.0), 0.0)
+        return float(np.mean(pb * lb + (1.0 - pb) * lg))
 
     @property
     def neutral(self) -> bool:
@@ -323,8 +365,11 @@ def draw_dynamics(key, cfg: ScenarioConfig, M: int):
     When enabled: ``cell_start``/``cell_end`` (P,) + ``cell_mask`` (N, P)
     correlated-outage events, and ``ge_bad0`` (N,) initial states +
     ``ge_u_trans``/``ge_u_loss`` (N, M) uniforms for the Gilbert–Elliott
-    chain (its four probabilities ride along as traced scalars in
-    ``ge_params`` so sweeping them does not retrace)."""
+    chain (its four probabilities ride along as traced values in
+    ``ge_params`` — (4,) scalars, or (4, N) per-helper when any ``ge_*``
+    knob is a per-class tuple: each helper draws a class uniformly, so one
+    cell can mix fast and slow faders — so sweeping them does not
+    retrace)."""
     ch = cfg.churn
     kd, ku, ks, kdur, kc, kg = jax.random.split(key, 6)
     N, P = cfg.N, ch.n_phases
@@ -352,12 +397,28 @@ def draw_dynamics(key, cfg: ScenarioConfig, M: int):
         dyn["cell_mask"] = jax.random.bernoulli(km, ch.cell_frac, (N, P))
     if ch.ge_enabled:
         kb, kt, klo = jax.random.split(kg, 3)
-        dyn["ge_bad0"] = jax.random.bernoulli(kb, ch.ge_stationary_bad, (N,))
+        if ch.ge_classes == 1:
+            dyn["ge_bad0"] = jax.random.bernoulli(
+                kb, ch.ge_stationary_bad, (N,))
+            dyn["ge_params"] = jnp.asarray([
+                np.asarray(ch.ge_p_bad).item(),
+                np.asarray(ch.ge_p_good).item(),
+                np.asarray(ch.ge_loss_good).item(),
+                np.asarray(ch.ge_loss_bad).item(),
+            ])
+        else:
+            # Heterogeneous GE: each helper draws a fader class uniformly;
+            # the chain starts in its per-helper stationary distribution.
+            cls = jax.random.randint(
+                jax.random.fold_in(kg, 0xFADE), (N,), 0, ch.ge_classes)
+            per = jnp.asarray(ch.ge_class_params(), dtype=jnp.float32)[:, cls]
+            pb, pg = per[0], per[1]
+            denom = pb + pg
+            stat = jnp.where(denom > 0, pb / jnp.where(denom > 0, denom, 1.0), 0.0)
+            dyn["ge_bad0"] = jax.random.uniform(kb, (N,)) < stat
+            dyn["ge_params"] = per  # (4, N)
         dyn["ge_u_trans"] = jax.random.uniform(kt, (N, M))
         dyn["ge_u_loss"] = jax.random.uniform(klo, (N, M))
-        dyn["ge_params"] = jnp.asarray(
-            [ch.ge_p_bad, ch.ge_p_good, ch.ge_loss_good, ch.ge_loss_bad]
-        )
     return dyn
 
 
@@ -386,18 +447,17 @@ def _interval_hit(start, end, t, window: float):
     return ((tm >= start) & (tm < end)) | (tm < (end - window))
 
 
-@functools.partial(
-    jax.jit, static_argnames=("mode", "cfg_static", "churn_static")
-)
 def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
                     churn_static=None, dyn=None, a=None, naive_to=None):
     """Simulate M packets on every helper. Returns dict of (N, M) arrays
     (plus ``tx_end`` (N,): the send time of the first unsimulated packet).
 
-    mode: 'ccp'   — Algorithm 1 (estimated TTI, ring-buffer feedback delay,
-                    and — under churn — the l.13-14 timeout/backoff path)
-          'best'  — oracle TTI_{n,i} = beta_{n,i} (paper's Best, eq. 13)
-          'naive' — stop-and-wait: tx_{i+1} = Tr_i (paper's Naive, eq. 16)
+    Deprecated mode-string shim over
+    :func:`repro.core.engine.policy_stream`: ``mode`` is resolved through
+    the policy registry (``'ccp'`` — Algorithm 1; ``'best'`` — oracle
+    TTI_{n,i} = beta_{n,i}, eq. 13; ``'naive'`` — stop-and-wait, eq. 16;
+    any other registered policy name also works).
+
     cfg_static: hashable (Bx, Br, Back, alpha) tuple.
     churn_static: ``ChurnConfig.static_key()`` — hashable (period,
         max_backoff, outage_dist, ge_enabled, cell_enabled) — or the legacy
@@ -406,161 +466,20 @@ def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
         ``a`` (N,) runtime offsets, and — for 'naive' — ``naive_to`` (N,)
         fixed retransmission timeouts must be provided.
     """
-    Bx, Br, Back, alpha = cfg_static
-    cfg = ccp_mod.CCPConfig(Bx=Bx, Br=Br, Back=Back, alpha=alpha)
-    N, M = beta.shape
-    state0 = ccp_mod.init_state(N)
-    churn = churn_static is not None
-    ge_on = cell_on = False
-    outage_dist = "phase"
-    if churn:
-        if len(churn_static) == 2:  # legacy direct callers (phase model)
-            period, max_backoff = churn_static
-        else:
-            period, max_backoff, outage_dist, ge_on, cell_on = churn_static
-        window = period * dyn["speed"].shape[1]
+    from . import engine, policies
 
-    carry0 = dict(
-        tx=jnp.zeros(N),              # send time of current packet (Tx_{n,1}=0)
-        done_prev=jnp.zeros(N),
-        tr_prev=jnp.zeros(N),
-        est=state0,
-        ring_tr=jnp.full((N, RING), jnp.inf),
-        ring_tti=jnp.zeros((N, RING)),
+    warnings.warn(
+        "simulate_stream(mode=...) is deprecated; use "
+        "engine.policy_stream(policy=policies.get(mode), ...)",
+        DeprecationWarning, stacklevel=2,
     )
-    xs = dict(
-        beta=beta.T, d_up=d_up.T, d_ack=d_ack.T, d_down=d_down.T,
-        i=jnp.arange(M),
+    aux = {} if naive_to is None else {"naive_to": naive_to}
+    outs, _ = engine.policy_stream(
+        beta, d_up, d_ack, d_down, policy=policies.get(mode),
+        cfg_static=cfg_static, churn_static=churn_static, dyn=dyn, a=a,
+        aux=aux,
     )
-    if churn:
-        xs["drop"] = dyn["drop"].T
-    if ge_on:
-        carry0["ge_bad"] = dyn["ge_bad0"]
-        xs["ge_u_trans"] = dyn["ge_u_trans"].T
-        xs["ge_u_loss"] = dyn["ge_u_loss"].T
-
-    def step(carry, x):
-        tx = carry["tx"]
-        arrive = tx + x["d_up"]
-        start = jnp.maximum(arrive, carry["done_prev"])
-        if churn:
-            # Outage if the helper is down when the packet arrives or when
-            # it would start computing; degraded phases stretch the runtime
-            # (beta = a + eps/mu, so (beta-a)/speed rescales the random part).
-            if outage_dist == "phase":
-                is_up = (_phase_lookup(dyn["up"], arrive, period)
-                         & _phase_lookup(dyn["up"], start, period))
-            else:
-                is_up = ~(_interval_hit(dyn["out_start"], dyn["out_end"],
-                                        arrive, window)
-                          | _interval_hit(dyn["out_start"], dyn["out_end"],
-                                          start, window)).any(axis=1)
-            if cell_on:
-                in_cell = dyn["cell_mask"] & (
-                    _interval_hit(dyn["cell_start"], dyn["cell_end"],
-                                  arrive, window)
-                    | _interval_hit(dyn["cell_start"], dyn["cell_end"],
-                                    start, window)
-                )
-                is_up &= ~in_cell.any(axis=1)
-            sp = _phase_lookup(dyn["speed"], start, period)
-            beta_i = jnp.where(sp == 1.0, x["beta"], a + (x["beta"] - a) / sp)
-            lost = x["drop"] | ~is_up
-        else:
-            beta_i = x["beta"]
-            lost = jnp.zeros((N,), bool)
-        if ge_on:
-            # Gilbert–Elliott: loss by the current state, then the per-packet
-            # state transition (the chain advances even for packets already
-            # lost to an outage — the radio fades regardless).
-            p_bad, p_good, l_good, l_bad = dyn["ge_params"]
-            bad = carry["ge_bad"]
-            lost |= x["ge_u_loss"] < jnp.where(bad, l_bad, l_good)
-            ge_bad_next = jnp.where(
-                bad, x["ge_u_trans"] >= p_good, x["ge_u_trans"] < p_bad
-            )
-        received = ~lost
-        done_ok = start + beta_i
-        tr_ok = done_ok + x["d_down"]
-        # A lost packet never occupies the helper nor reaches the collector.
-        done = jnp.where(lost, carry["done_prev"], done_ok)
-        tr = jnp.where(lost, jnp.inf, tr_ok)
-        idle = jnp.where(
-            lost, 0.0, jnp.maximum(arrive - carry["done_prev"], 0.0)
-        )
-        rtt_ack = x["d_up"] + x["d_ack"]
-
-        if mode == "ccp":
-            est, _tti_i = ccp_mod.on_computed(
-                carry["est"], cfg, tx, tr_ok, carry["tr_prev"], rtt_ack,
-                active=received,
-            )
-            slot = x["i"] % RING
-            ring_tr = carry["ring_tr"].at[:, slot].set(
-                jnp.where(received, tr_ok, jnp.inf)
-            )
-            ring_tti = carry["ring_tti"].at[:, slot].set(est.e_beta)
-            # E[beta] estimate in effect when planning the next send: the
-            # entry with the largest Tr among those with Tr <= tx (latest
-            # information that had arrived by the current send instant).
-            valid = ring_tr <= tx[:, None]
-            masked = jnp.where(valid, ring_tr, -jnp.inf)
-            sel = jnp.argmax(masked, axis=1)
-            has = valid.any(axis=1)
-            e_beta_sel = jnp.take_along_axis(ring_tti, sel[:, None], axis=1)[:, 0]
-            # eq. (8), causal form: tx_{i+1} = min(Tr_i, tx_i + E[beta]),
-            # scaled by the timeout backoff factor (1 when no timeouts).
-            # Bootstrap: before any computed packet has returned by tx, the
-            # collector has no estimate -> stop-and-wait on this packet.
-            tti_est = e_beta_sel * est.tti_backoff
-            tx_next = jnp.where(has, jnp.minimum(tr_ok, tx + tti_est), tr_ok)
-            if churn:
-                # Alg. 1 lines 13-14 for a lost packet: the loss is detected
-                # when TO = 2*(TTI + RTT^data) elapses (``timeout_deadline``
-                # with the *pre-doubling* TTI), the stream resumes then, and
-                # the backoff doubles (capped) for the following sends.
-                # Consecutive losses therefore space out geometrically and a
-                # receipt (on_computed above) resets the backoff — so a
-                # helper that rejoins is re-ramped.  ``rtt_eff`` floors the
-                # RTT term with this packet's scaled ACK sample so helpers
-                # that never responded yet still have a finite deadline.
-                rtt_eff = jnp.maximum(est.rtt_data, cfg.data_scale * rtt_ack)
-                tti_pre = jnp.where(has, e_beta_sel, rtt_eff) * est.tti_backoff
-                deadline = ccp_mod.timeout_deadline(
-                    est.replace(rtt_data=rtt_eff), tti_pre
-                )
-                est = ccp_mod.on_timeout(est, lost, max_backoff=max_backoff)
-                tx_next = jnp.where(lost, tx + deadline, tx_next)
-        elif mode == "best":
-            est = carry["est"]
-            ring_tr, ring_tti = carry["ring_tr"], carry["ring_tti"]
-            tx_next = tx + beta_i  # oracle: TTI_{n,i} = beta_{n,i}
-        elif mode == "naive":
-            est = carry["est"]
-            ring_tr, ring_tti = carry["ring_tr"], carry["ring_tti"]
-            tx_next = tr_ok
-            if churn:
-                # Stop-and-wait ARQ with a fixed (true-mean-based, i.e.
-                # generous) retransmission timeout.
-                tx_next = jnp.where(lost, tx + naive_to, tr_ok)
-        else:
-            raise ValueError(mode)
-
-        new_carry = dict(
-            tx=tx_next, done_prev=done,
-            tr_prev=jnp.where(received, tr_ok, carry["tr_prev"]),
-            est=est, ring_tr=ring_tr, ring_tti=ring_tti,
-        )
-        if ge_on:
-            new_carry["ge_bad"] = ge_bad_next
-        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive, beta=beta_i,
-                   lost=lost, backoff=est.tti_backoff)
-        return new_carry, out
-
-    final, outs = jax.lax.scan(step, carry0, xs)
-    res = {k: v.T for k, v in outs.items()}  # (N, M)
-    res["tx_end"] = final["tx"]
-    return res
+    return outs
 
 
 # ---------------------------------------------------------------------------
@@ -590,76 +509,28 @@ def completion_time(tr: jnp.ndarray, k: int,
 
 def efficiency_measured(tr, idle, beta, t_end) -> jnp.ndarray:
     """Paper §6 'Efficiency': 1 - sum(idle)/sum(beta) over packets the helper
-    computed within the completion horizon. Returns (N,) per-helper values."""
-    within = tr <= t_end
+    computed within the completion horizon. Returns (N,) per-helper values.
+
+    The finiteness guard matters when ``t_end`` is +inf (a block-policy rep
+    that can never complete): packets with ``tr = inf`` — lost or masked
+    out of the block — must not count as computed."""
+    within = jnp.isfinite(tr) & (tr <= t_end)
     idle_sum = (idle * within).sum(axis=1)
     busy_sum = (beta * within).sum(axis=1)
     return jnp.where(busy_sum > 0, 1.0 - idle_sum / (idle_sum + busy_sum), jnp.nan)
 
 
 # ---------------------------------------------------------------------------
-# One Monte-Carlo rep (pure-jax core shared by the sequential and batched
-# runners)
+# One Monte-Carlo rep — mode-string shim over the policy engine
 # ---------------------------------------------------------------------------
 
 def _sim_one(key, cfg: ScenarioConfig, R: int, M: int, mode: str):
-    """Full single-rep pipeline as a traceable function of ``key``.
+    """Full single-rep pipeline as a traceable function of ``key``; the
+    mode string is resolved through the policy registry (every registered
+    policy works, not just the four legacy modes)."""
+    from . import engine, policies
 
-    ``mode`` adds 'naive_oracle' on top of simulate_stream's modes: the
-    same stop-and-wait stream as 'naive' but with a per-helper *oracle*
-    ARQ timer built from the true (unobservable) mean runtime and link
-    rate — it separates Naive's pipelining loss from its timer-adaptation
-    loss in the churn benchmarks (ROADMAP follow-up)."""
-    k_h, k_p = jax.random.split(key)
-    mu, a, rate = draw_helpers(k_h, cfg)
-    beta, d_up, d_ack, d_down = draw_packet_tables(k_p, cfg, mu, a, rate, M, R)
-    c = cfg.ccp_cfg(R)
-    cfg_static = (c.Bx, c.Br, c.Back, c.alpha)
-    stream_mode = "naive" if mode == "naive_oracle" else mode
-    if cfg.churn is None:
-        outs = simulate_stream(beta, d_up, d_ack, d_down, mode=stream_mode,
-                               cfg_static=cfg_static)
-        tx_end = None
-    else:
-        k_c = jax.random.fold_in(key, 0xC0DE)
-        dyn = draw_dynamics(k_c, cfg, M)
-        if mode == "naive_oracle":
-            # Oracle timer: the true per-helper mean runtime + data RTT.
-            naive_to = ccp_mod.arq_timeout(a + 1.0 / mu, (c.Bx + c.Br) / rate)
-        else:
-            # Naive has no estimator (eq. 16 stop-and-wait), so its ARQ
-            # timer is a *static* one provisioned for the slowest helper
-            # class — it cannot adapt to per-helper speed, which is exactly
-            # what it pays for under churn.
-            mu_min = min(cfg.mu_choices)
-            a_max = (cfg.a_const if cfg.a_mode == "const" else 1.0 / mu_min)
-            naive_to = ccp_mod.arq_timeout(
-                a_max + 1.0 / mu_min, (c.Bx + c.Br) / rate
-            )
-        outs = simulate_stream(
-            beta, d_up, d_ack, d_down, mode=stream_mode,
-            cfg_static=cfg_static, churn_static=cfg.churn.static_key(),
-            dyn=dyn, a=a, naive_to=naive_to,
-        )
-        tx_end = outs["tx_end"]
-    kk = R + cfg.K(R)
-    t, valid = completion_time(outs["tr"], kk, tx_end=tx_end)
-    eff = efficiency_measured(outs["tr"], outs["idle"], outs["beta"], t)
-    r_n = (outs["tr"] <= t).sum(axis=1)
-    max_backoff = outs["backoff"].max(axis=1)
-    lost_frac = outs["lost"].mean(axis=1)
-    return dict(T=t, valid=valid, efficiency=eff, r_n=r_n, mu=mu, a=a,
-                rate=rate, max_backoff=max_backoff, lost_frac=lost_frac)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "mode"))
-def _sim_one_jit(key, cfg, R, M, mode):
-    return _sim_one(key, cfg, R, M, mode)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "mode"))
-def _sim_batch_jit(keys, cfg, R, M, mode):
-    return jax.vmap(lambda k: _sim_one(k, cfg, R, M, mode))(keys)
+    return engine._sim_one(key, cfg, R, M, policies.get(mode))
 
 
 def _m_cap(cfg: ScenarioConfig, kk: int) -> int:
@@ -695,42 +566,45 @@ def _horizon_shared(cfg: ScenarioConfig, R: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Top-level runners
+# Top-level runners — deprecated mode-string shims over the policy engine
 # ---------------------------------------------------------------------------
+
+def _warn_mode_shim(fn: str, mode: str) -> None:
+    warnings.warn(
+        f"{fn} is a deprecated mode-string shim; use "
+        f"engine.Engine().run(cfg, policies.get({mode!r}), keys, R)",
+        DeprecationWarning, stacklevel=3,
+    )
+
 
 def _run_mode(key, cfg: ScenarioConfig, R: int, mode: str,
               M_override: Optional[int] = None) -> Dict[str, np.ndarray]:
-    k_h, _ = jax.random.split(key)
-    mu, a, _rate = draw_helpers(k_h, cfg)
-    kk = R + cfg.K(R)
-    cap = _m_cap(cfg, kk)
-    M = M_override if M_override is not None else _horizon(cfg, mu, a, R)
-    for _ in range(8):  # grow horizon until the order statistic is certified
-        out = _sim_one_jit(key, cfg, R, M, mode)
-        if bool(out["valid"]) or M >= cap or M_override is not None:
-            break
-        M = min(M * 2, cap)
-    res = {k: np.asarray(v) for k, v in out.items()}
-    res["T"] = float(res["T"])
-    res["M"] = M
-    return res
+    from . import engine, policies
+
+    return engine.Engine().run_one(
+        key, cfg, policies.get(mode), R, M_override=M_override
+    )
 
 
 def run_ccp(key, cfg: ScenarioConfig, R: int):
+    _warn_mode_shim("run_ccp", "ccp")
     return _run_mode(key, cfg, R, "ccp")
 
 
 def run_best(key, cfg: ScenarioConfig, R: int):
+    _warn_mode_shim("run_best", "best")
     return _run_mode(key, cfg, R, "best")
 
 
 def run_naive(key, cfg: ScenarioConfig, R: int):
+    _warn_mode_shim("run_naive", "naive")
     return _run_mode(key, cfg, R, "naive")
 
 
 def run_naive_oracle(key, cfg: ScenarioConfig, R: int):
-    """Naive stop-and-wait with the per-helper oracle ARQ timer (see
-    :func:`_sim_one`) — only meaningful under churn."""
+    """Naive stop-and-wait with the per-helper oracle ARQ timer — only
+    meaningful under churn."""
+    _warn_mode_shim("run_naive_oracle", "naive_oracle")
     return _run_mode(key, cfg, R, "naive_oracle")
 
 
@@ -752,6 +626,12 @@ def batch_keys(reps: int, seed0: int = 0,
     ``(seed0, rep)`` pairs once ``reps`` approaches the 100003 stride
     (bench JSONs carry :data:`KEY_SCHEDULE` so runs are comparable)."""
     if schedule == "legacy":
+        warnings.warn(
+            "batch_keys(schedule='legacy') reproduces the collision-prone "
+            "PR-1 key arithmetic and is deprecated; use the default "
+            "'fold_in' schedule",
+            DeprecationWarning, stacklevel=2,
+        )
         return jax.vmap(jax.random.PRNGKey)(seed0 * 100003 + jnp.arange(reps))
     if schedule != "fold_in":
         raise ValueError(f"unknown key schedule {schedule!r}")
@@ -759,73 +639,32 @@ def batch_keys(reps: int, seed0: int = 0,
     return jax.vmap(lambda r: jax.random.fold_in(root, r))(jnp.arange(reps))
 
 
-@functools.lru_cache(maxsize=None)
-def _sharded_batch_fn(cfg, R: int, M: int, mode: str, devs: tuple,
-                      batch: int):
-    """Jitted shard_map runner: the key batch is split over a 1-D 'data'
-    mesh of ``devs`` and each device vmaps its shard through ``_sim_one``
-    — per-rep lanes are independent, so no collectives and results are
-    identical to the single-device vmap."""
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec
-
-    from ..parallel import sharding as shd
-
-    mesh = shd.data_mesh(devs)
-    spec = shd.batch_spec(mesh, batch, extra_dims=1)
-    body = lambda k: jax.vmap(lambda kk: _sim_one(kk, cfg, R, M, mode))(k)
-    fn = shard_map(body, mesh=mesh, in_specs=(spec,),
-                   out_specs=PartitionSpec("data"), check_rep=False)
-    return jax.jit(fn)
-
-
-def _sim_batch_sharded(keys, cfg: ScenarioConfig, R: int, M: int, mode: str,
-                       devices=None):
-    """Device-sharded batch: pad the key batch to a multiple of the device
-    count (padding reps are discarded after the run) and shard it over the
-    local device mesh."""
-    devs = tuple(devices) if devices is not None else tuple(jax.local_devices())
-    B = keys.shape[0]
-    pad = (-B) % len(devs)
-    keys_p = keys if pad == 0 else jnp.concatenate(
-        [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])]
-    )
-    out = _sharded_batch_fn(cfg, R, M, mode, devs, keys_p.shape[0])(keys_p)
-    return {k: v[:B] for k, v in out.items()}
-
-
 def run_batch(keys, cfg: ScenarioConfig, R: int, mode: str,
               M_override: Optional[int] = None, shard: bool = False,
               devices=None) -> Dict[str, np.ndarray]:
-    """Vmapped Monte-Carlo over a batch of PRNG keys (see module docstring).
+    """Vmapped Monte-Carlo over a batch of PRNG keys.
 
-    Returns a dict of stacked arrays: T (B,), valid (B,), efficiency (B, N),
-    r_n, mu, a, rate, max_backoff, lost_frac (B, N), plus the shared horizon
-    M actually used.  All reps share one bucketed horizon; if any rep's
-    completion time is uncertified the horizon doubles and the batch re-runs.
+    Deprecated mode-string shim over :meth:`repro.core.engine.Engine.run`
+    (kept bit-for-bit equivalent by the golden tests).  Returns the legacy
+    dict of stacked arrays: T (B,), valid (B,), efficiency (B, N), r_n,
+    mu, a, rate, max_backoff, lost_frac (B, N), plus the shared horizon M
+    actually used.  All reps share one bucketed horizon; if any rep is
+    uncertified the horizon doubles and the batch re-runs.
 
     ``valid`` marks reps whose completion time is *certified*; when the
     horizon cap is hit under heavy churn, uncertified reps come back with
     ``valid=False`` and MUST be dropped (and counted) by the caller —
-    ``benchmarks.common.mc_sim`` does this — never averaged.
+    ``benchmarks.common.certified`` does this — never averaged.
 
     ``shard=True`` splits the key batch over ``devices`` (default: all
     local devices) via ``shard_map`` on a 1-D 'data' mesh, padding the
     batch up to a device-count multiple; results are identical to the
     unsharded vmap because per-rep lanes never communicate.
     """
-    keys = jnp.asarray(keys)
-    kk = R + cfg.K(R)
-    cap = _m_cap(cfg, kk)
-    M = M_override if M_override is not None else _horizon_shared(cfg, R)
-    for _ in range(8):
-        if shard:
-            out = _sim_batch_sharded(keys, cfg, R, M, mode, devices)
-        else:
-            out = _sim_batch_jit(keys, cfg, R, M, mode)
-        if bool(out["valid"].all()) or M >= cap or M_override is not None:
-            break
-        M = min(M * 2, cap)
-    res = {k: np.asarray(v) for k, v in out.items()}
-    res["M"] = M
-    return res
+    from . import engine, policies
+
+    _warn_mode_shim("run_batch", mode)
+    res = engine.Engine(shard=shard, devices=devices).run(
+        cfg, policies.get(mode), keys, R, M_override=M_override
+    )
+    return res.as_dict()

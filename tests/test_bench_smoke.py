@@ -3,8 +3,10 @@
 Runs the churn figure end-to-end at tiny scale (2 reps, R=200, N=20,
 sweep endpoints only) in a subprocess, pointing BENCH_OUT_DIR at a tmpdir
 so the committed full-scale artifacts are untouched, and checks the
-artifact schema: the key-schedule meta marker, all three sweeps, all four
-modes, and per-point invalid-rep counts (dropped, never averaged).
+artifact schema: the key-schedule and policy meta markers, all three
+sweeps, *every registered policy* (so a policy that breaks under
+jit/vmap/shard fails this fast lane), and per-point invalid-rep counts
+(dropped, never averaged).
 """
 
 import json
@@ -17,6 +19,8 @@ _ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def test_run_smoke_fig_churn(tmp_path):
+    from repro.core import policies
+
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     env["BENCH_OUT_DIR"] = str(tmp_path)
@@ -31,12 +35,15 @@ def test_run_smoke_fig_churn(tmp_path):
 
     doc = json.loads((tmp_path / "fig_churn.json").read_text())
     assert doc["meta"]["key_schedule"] == "fold_in"
+    # the smoke lane sweeps every registered policy, recorded in the meta
+    swept = doc["meta"]["policy"]
+    assert set(swept) == set(policies.names())
     rows = doc["data"]
     assert {r["sweep"] for r in rows} == {"iid", "burst", "cell"}
     for r in rows:
-        for mode in ("ccp", "best", "naive", "naive_oracle"):
-            assert "invalid" in r[mode], r
-            assert r[mode]["invalid"] + 1 > 0  # present and an int
+        for name in swept:
+            assert "invalid" in r[name], (name, r)
+            assert r[name]["invalid"] + 1 > 0  # present and an int
     # the endpoints tell the adaptivity story even at smoke scale: the
     # static-timer Naive must degrade more than CCP on the loss sweeps
     by = {(r["sweep"], i): r for s in ("iid", "burst", "cell")
@@ -46,3 +53,10 @@ def test_run_smoke_fig_churn(tmp_path):
         ccp_deg = hi["ccp"]["mean"] / lo["ccp"]["mean"]
         naive_deg = hi["naive"]["mean"] / lo["naive"]["mean"]
         assert naive_deg > ccp_deg, (sweep, ccp_deg, naive_deg)
+    # the code-rate acceptance anchor: adapting the fountain overhead to
+    # the measured loss process beats fixed-K CCP under burst loss
+    hi = by[("burst", 1)]
+    assert hi["adaptive_rate"]["mean"] < hi["ccp"]["mean"], hi
+    # block baselines have no ARQ/coding slack: on the lossy burst endpoint
+    # the uncoded task must be unfinishable (recorded, not averaged away)
+    assert hi["uncoded_mean"]["mean"] == float("inf")
