@@ -42,7 +42,7 @@ def mc(fn: Callable, cfg, R: int, reps: int, seed0: int = 0) -> Dict[str, float]
 
 
 def certified(out: Dict, label: str) -> np.ndarray:
-    """The certification mask of a ``run_batch`` result, as the one shared
+    """The certification mask of an ``Engine.run`` result, as the one shared
     drop-the-invalid-reps gate: raises when *no* rep is certified (horizon
     cap hit for the whole batch), otherwise returns the boolean mask the
     caller must apply before aggregating (counting ``~mask`` as invalid)."""
@@ -75,16 +75,6 @@ def mc_policy(cfg, R: int, reps: int, policy: str, seed0: int = 0,
     return stats
 
 
-def mc_sim(cfg, R: int, reps: int, mode: str, seed0: int = 0,
-           shard: bool = False) -> Dict[str, float]:
-    """Deprecated mode-string alias of :func:`mc_policy`."""
-    import warnings
-
-    warnings.warn("mc_sim(mode=...) is deprecated; use mc_policy",
-                  DeprecationWarning, stacklevel=2)
-    return mc_policy(cfg, R, reps, mode, seed0=seed0, shard=shard)
-
-
 def policy_meta(names) -> Dict[str, int]:
     """``meta.policy`` entry for bench artifacts: registry name -> version
     for every policy the run swept (artifact rows from different policy
@@ -102,14 +92,22 @@ def emit(name: str, rows: List[dict], derived: str = "",
     PRNG key schedule (PR 2 switched batch_keys from the collision-prone
     ``seed0*100003 + r`` arithmetic to ``fold_in``) and — for policy sweeps
     — ``meta.policy``, the registry name -> version map from
-    :func:`policy_meta`, so numbers from different schedules or policy
-    implementations are never compared silently."""
+    :func:`policy_meta`, plus ``meta.decoder``, marking per policy whether
+    its completion rule actually *decodes* in the loop (``"in_loop"``) or
+    counts packets (``"counter"``), so delay trajectories from the two
+    completion semantics are never compared silently."""
+    from repro.core import policies as policy_registry
     from repro.core import simulator
 
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     meta = {"key_schedule": simulator.KEY_SCHEDULE}
     if policies:
         meta["policy"] = dict(policies)
+        meta["decoder"] = {
+            n: ("in_loop" if policy_registry.get(n).uses_decoder
+                else "counter")
+            for n in policies
+        }
     doc = {"meta": meta, "data": rows}
     (OUT_DIR / f"{name}.json").write_text(json.dumps(doc, indent=1))
     print(f"{name},-,{derived}")

@@ -8,6 +8,8 @@ simulation benchmarks whose deliverable is the derived statistics).
   fig5        — CCP vs best/naive gaps on slow links (paper Fig. 5)
   fig_churn   — delay/efficiency under i.i.d./burst/cell-outage churn
                 (beyond-paper, §1 claim; includes naive+oracle-timer)
+  fig_decode  — measured LT decode overhead + counter-vs-decoder honesty
+                gap across a loss sweep (beyond-paper, PR-4 decoder loop)
   efficiency  — measured vs eq.(12) efficiency (paper §6 table)
   overhead    — fountain codec failure prob + O(R) timing (paper §2 claims)
   kernel      — Pallas hot-spot roofline accounting + batched-MC speedup
@@ -57,8 +59,8 @@ def main(argv=None) -> None:
 
     from repro.core import policies as policy_registry
 
-    from . import (efficiency, fig3, fig4, fig5, fig_churn, kernel_bench,
-                   overhead, roofline_report)
+    from . import (efficiency, fig3, fig4, fig5, fig_churn, fig_decode,
+                   kernel_bench, overhead, roofline_report)
 
     reps_explicit = args.reps is not None
     reps = args.reps if reps_explicit else (
@@ -82,15 +84,19 @@ def main(argv=None) -> None:
                     for name, (axis, mk, ax_name) in fig_churn.SWEEPS.items()},
             R=200, n_helpers=20,
         )
+        decode_kw = dict(sweep=(0.0, 0.2), R=200, n_helpers=16,
+                         offline_trials=2)
     elif args.fast:
         sweep = (500, 1000)
         churn_kw = dict(
             sweeps={name: ((axis[0], axis[2]), mk, ax_name)
                     for name, (axis, mk, ax_name) in fig_churn.SWEEPS.items()},
         )
+        decode_kw = dict(sweep=(0.0, 0.2), offline_trials=4)
     else:
         sweep = (1000, 2000, 4000, 8000)
         churn_kw = {}
+        decode_kw = {}
     small = args.fast or args.smoke
     # An explicit --reps is honored verbatim everywhere; the per-figure
     # scaling below only applies to the lane defaults.
@@ -107,6 +113,8 @@ def main(argv=None) -> None:
                                  **fig_policies),
         "fig_churn": lambda: fig_churn.run(reps=reps, shard=shard,
                                            **churn_policies, **churn_kw),
+        "fig_decode": lambda: fig_decode.run(reps=reps, shard=shard,
+                                             **decode_kw),
         "efficiency": lambda: efficiency.run(
             reps=eff_reps,
             R=400 if args.smoke else (2000 if args.fast else 8000),

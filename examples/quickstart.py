@@ -11,7 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.ccp_paper import FIG3
-from repro.core import baselines, coded_matmul, simulator, theory
+from repro.core import baselines, coded_matmul, engine, simulator, theory
+
+run_one = engine.Engine().run_one
 
 
 def ccp_vs_baselines():
@@ -19,14 +21,14 @@ def ccp_vs_baselines():
     cfg, R = FIG3[1], 2000
     Ts = {}
     for name, fn in (
-        ("ccp", simulator.run_ccp),
-        ("best", simulator.run_best),
+        ("ccp", lambda k, c, r: run_one(k, c, "ccp", r)),
+        ("best", lambda k, c, r: run_one(k, c, "best", r)),
         ("uncoded", lambda k, c, r: baselines.run_uncoded(k, c, r, "mean")),
         ("hcmm", baselines.run_hcmm),
     ):
         Ts[name] = np.mean([fn(jax.random.PRNGKey(i), cfg, R)["T"]
                             for i in range(5)])
-    o = simulator.run_ccp(jax.random.PRNGKey(0), cfg, R)
+    o = run_one(jax.random.PRNGKey(0), cfg, "ccp", R)
     t_opt = theory.t_opt_model1(R, cfg.K(R), o["a"], o["mu"])
     for k, v in Ts.items():
         print(f"  T_{k:8s} = {v:8.2f}s")

@@ -1,0 +1,56 @@
+"""Decoder-in-the-loop: incremental LT peeling decode inside the engine scan.
+
+The paper's C3P argues an O(R) Raptor decode cost, but a simulator that
+*counts* packets (completion = the (R+K)-th order statistic) never actually
+decodes — LT overhead randomness is invisible and a policy cannot shed
+redundancy when the decode finishes early.  This subsystem closes that loop
+with a scan/vmap-safe incremental peeling decoder
+(:mod:`repro.core.decode.peeling`):
+
+* ``DecoderState`` — per-source recovered mask, parity residual-degree
+  table, ripple/decoded counters — a plain dict pytree carried through the
+  engine's per-packet ``lax.scan``.
+* ``absorb`` / ``peel_round`` / ``peel`` — pure jnp fixpoint peeling, the
+  online mirror of :func:`repro.core.fountain.peel_decode_plan`.
+* ``decode_completion`` — the *time-exact* completion rule: binary search
+  over the time-sorted arrival prefix for the first decodable subset
+  (peeling success is monotone in the received set, so the search is exact).
+
+Payload-level decoding lives in :mod:`repro.kernels.lt_decode` (a batched
+masked gather + subtract peel-round Pallas kernel over the round-levelized
+:func:`repro.core.fountain.plan_rounds` schedule).
+"""
+
+from .peeling import (  # noqa: F401
+    DEC_DMAX,
+    DEC_SEED,
+    DecoderTables,
+    absorb,
+    decode_completion,
+    decoder_aux,
+    finalize_decode,
+    init_state,
+    make_decoder_code,
+    make_tables,
+    offline_overhead_samples,
+    peel,
+    peel_round,
+    slot_ids,
+)
+
+__all__ = [
+    "DEC_DMAX",
+    "DEC_SEED",
+    "DecoderTables",
+    "absorb",
+    "decode_completion",
+    "decoder_aux",
+    "finalize_decode",
+    "init_state",
+    "make_decoder_code",
+    "make_tables",
+    "offline_overhead_samples",
+    "peel",
+    "peel_round",
+    "slot_ids",
+]

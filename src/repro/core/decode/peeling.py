@@ -1,0 +1,368 @@
+"""Scan/vmap-safe incremental LT peeling decoder.
+
+The offline decoder (:func:`repro.core.fountain.peel_decode_plan`) walks the
+residual graph with Python sets — exact, but host-side and per-received-set.
+This module is the *online* mirror: fixed-shape jnp arrays and pure
+functions, so the decode state can ride the engine's per-packet ``lax.scan``
+carry, vmapped over Monte-Carlo reps and device-sharded, with zero host
+round-trips.
+
+Representation
+--------------
+The code is the systematic LT construction of :func:`fountain.make_lt_code`
+with a *parity pool* of ``P`` rows (`make_decoder_code`).  Global coded ids
+are assigned to send slots deterministically — helper ``n``'s packet ``i``
+carries id ``g = i*N + n`` (`slot_ids`) — so ids ``g < R`` are the source
+blocks themselves and ids ``g >= R`` map onto pool row ``(g - R) % P``
+(wrapping past the pool resends an earlier parity; the absorb is idempotent,
+so duplicates are harmless and simply useless, like a repeated fountain
+symbol).
+
+``DecoderState`` (a plain dict pytree, one per Monte-Carlo rep):
+
+==============  =========  ==================================================
+``recovered``   (R,) bool  per-source-block recovered mask
+``rx``          (P,) bool  which parity-pool rows have arrived
+``res_deg``     (P,) i32   residual degree of every pool row = #unrecovered
+                           neighbours (maintained for all rows, received or
+                           not, so a newly arrived row is peelable instantly)
+``count``       () i32     ``recovered.sum()``
+``ripple``      () i32     sources released by peeling in the last absorb
+``done``        () bool    ``count == R``
+==============  =========  ==================================================
+
+``absorb`` folds one batch of arrivals in and runs ``peel`` to the fixpoint
+(a ``lax.while_loop``; each round releases every received row of residual
+degree 1 at once).  Peeling to fixpoint is a monotone closure of the
+received set, so the final recovered mask is independent of arrival order —
+exactly the set the offline planner recovers (pinned by
+``tests/test_decode.py``).
+
+``decode_completion`` turns the (N, M) result-arrival table into the honest
+completion time: the decodable-prefix property is monotone in the
+time-sorted arrival prefix, so a binary search over the prefix length finds
+the *first instant* at which the collector's received set decodes — the
+quantity a packet counter can only approximate.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import fountain
+
+__all__ = [
+    "DEC_DMAX",
+    "DEC_SEED",
+    "DecoderTables",
+    "absorb",
+    "decode_completion",
+    "decoder_aux",
+    "finalize_decode",
+    "init_state",
+    "make_decoder_code",
+    "make_tables",
+    "offline_overhead_samples",
+    "peel",
+    "peel_round",
+    "slot_ids",
+]
+
+#: Neighbour-slot cap for the in-loop tables: robust-soliton degrees are
+#: overwhelmingly small and :func:`fountain.make_lt_code` trims the rare
+#: heavy rows coverage-aware, so 16 slots keep the per-step peel cost at
+#: O(P * 16) without hurting decodability at simulator block counts.
+DEC_DMAX = 16
+
+#: Pool-construction seed.  The code is *shared across Monte-Carlo reps*
+#: (like a real deployment's task-id-seeded pseudo-random code): the pool is
+#: built host-side from static ints in ``prepare`` and closed over by the
+#: trace, so it costs one constant, not a per-rep table.
+DEC_SEED = 0xDEC0DE
+
+DecoderTables = dict  # {"idx": (P, d_max) int32, "mask": (P, d_max) bool}
+
+
+def _cover_order(idx: np.ndarray, mask: np.ndarray, R: int) -> np.ndarray:
+    """Permutation of the parity rows into successive greedy covers.
+
+    The rateless stream emits pool rows in order, so the rows a decoder sees
+    *first* matter most: with soliton-random ordering the expected coverage
+    of a straggling source by the first ``B`` rows is only ``B * E[deg] / R``
+    and the decode tail stalls waiting for a parity that touches it.
+    Re-ordering the pool as cover after cover (each pass sweeps the
+    remaining rows, keeping those that touch a source the pass has not
+    covered yet) guarantees every source is touched within ~``R/E[deg]``
+    emitted parities per pass — the overhead tail collapses while the
+    *set* of pool rows (and hence the code) is unchanged.
+    """
+    P = idx.shape[0]
+    sets = [idx[p, mask[p]] for p in range(P)]
+    remaining = list(range(P))
+    order: list = []
+    while remaining:
+        covered = np.zeros(R, bool)
+        deferred = []
+        for p in remaining:
+            if not covered.all() and not covered[sets[p]].all():
+                covered[sets[p]] = True
+                order.append(p)
+            else:
+                deferred.append(p)
+        if len(deferred) == len(remaining):  # no progress possible
+            order.extend(deferred)
+            break
+        remaining = deferred
+    return np.asarray(order, dtype=np.int64)
+
+
+@functools.lru_cache(maxsize=64)
+def make_decoder_code(R: int, K_pool: Optional[int] = None, *,
+                      seed: int = DEC_SEED,
+                      d_max: int = DEC_DMAX) -> fountain.LTCode:
+    """Systematic LT code with a parity pool sized for in-loop decoding.
+
+    ``K_pool`` defaults to ``max(R, 64)``: enough distinct parities that the
+    rateless stream keeps producing *fresh* symbols up to ~50% effective
+    loss before the pool wraps into duplicates.  The pool rows are permuted
+    into successive greedy covers (:func:`_cover_order`) so the earliest
+    emitted parities already touch every source — the Raptor-flavoured fix
+    for the small-R soliton overhead tail.
+
+    Memoized: every input is a static int and ``prepare`` runs inside the
+    trace, so without the cache each compile variant (policy x churn config
+    x horizon doubling) would re-run the host-side pool construction.
+    Callers must treat the returned (numpy-backed) code as immutable.
+    """
+    if K_pool is None:
+        K_pool = max(R, 64)
+    code = fountain.make_lt_code(R, K_pool, seed=seed, d_max=d_max)
+    perm = _cover_order(code.idx[R:], code.mask[R:], R)
+    sl = np.concatenate([np.arange(R), R + perm])
+    return fountain.LTCode(idx=code.idx[sl], mask=code.mask[sl],
+                           coef=code.coef[sl], R=R, K=code.K)
+
+
+def make_tables(code: fountain.LTCode) -> DecoderTables:
+    """Parity-pool neighbour tables (the systematic prefix is implicit)."""
+    return {
+        "idx": jnp.asarray(code.idx[code.R:], jnp.int32),
+        "mask": jnp.asarray(code.mask[code.R:], bool),
+    }
+
+
+def decoder_aux(R: int, **code_kw) -> dict:
+    """The ``aux["decoder"]`` pytree a ``uses_decoder`` policy's ``prepare``
+    must hand the engine (see ``policies/base.py``): pool tables + zero
+    state, built host-side once from the static ``R``."""
+    tables = make_tables(make_decoder_code(R, **code_kw))
+    return {"tables": tables, "state0": init_state(R, tables)}
+
+
+def init_state(R: int, tables: DecoderTables) -> dict:
+    deg = tables["mask"].sum(axis=1).astype(jnp.int32)
+    P = tables["idx"].shape[0]
+    return dict(
+        recovered=jnp.zeros((R,), bool),
+        rx=jnp.zeros((P,), bool),
+        res_deg=deg,
+        count=jnp.int32(0),
+        ripple=jnp.int32(0),
+        done=jnp.asarray(False),
+    )
+
+
+def slot_ids(i, n: int) -> jnp.ndarray:
+    """Global coded id of each helper's packet at scan step ``i``: the
+    collector hands out fresh symbols round-robin across helpers."""
+    return i * n + jnp.arange(n, dtype=jnp.int32)
+
+
+def _deg_drop(tables: DecoderTables, new_src: jnp.ndarray) -> jnp.ndarray:
+    """Per-pool-row count of neighbours newly recovered (``new_src`` (R,))."""
+    return (tables["mask"] & new_src[tables["idx"]]).sum(axis=1).astype(jnp.int32)
+
+
+def peel_round(recovered, res_deg, rx, tables):
+    """One peel round: every received row of residual degree 1 releases its
+    unique unrecovered neighbour.  Returns (recovered, res_deg, released)."""
+    rel = rx & (res_deg == 1)
+    cand = tables["mask"] & ~recovered[tables["idx"]]  # (P, d_max)
+    new_src = (
+        jnp.zeros_like(recovered).at[tables["idx"]].max(cand & rel[:, None])
+    )
+    recovered = recovered | new_src
+    res_deg = res_deg - _deg_drop(tables, new_src)
+    return recovered, res_deg, new_src.sum().astype(jnp.int32)
+
+
+def peel(state: dict, tables: DecoderTables) -> dict:
+    """Peel to the fixpoint (no received row left at residual degree 1)."""
+    rx = state["rx"]
+
+    def cond(carry):
+        recovered, res_deg, _ = carry
+        return (rx & (res_deg == 1)).any()
+
+    def body(carry):
+        recovered, res_deg, released = carry
+        recovered, res_deg, n = peel_round(recovered, res_deg, rx, tables)
+        return recovered, res_deg, released + n
+
+    recovered, res_deg, released = jax.lax.while_loop(
+        cond, body, (state["recovered"], state["res_deg"], jnp.int32(0))
+    )
+    count = recovered.sum().astype(jnp.int32)
+    return dict(
+        state, recovered=recovered, res_deg=res_deg, count=count,
+        ripple=released, done=count == recovered.shape[0],
+    )
+
+
+def absorb(state: dict, tables: DecoderTables, ids, received) -> dict:
+    """Fold a batch of arrivals (global ids ``ids`` (n,), arrival mask
+    ``received`` (n,)) into the state and peel to the fixpoint.
+
+    Idempotent per id: duplicate systematic copies and pool-wrapped parity
+    resends are no-ops, so callers never need to dedupe."""
+    R = state["recovered"].shape[0]
+    P = tables["idx"].shape[0]
+    ids = ids.astype(jnp.int32)
+    is_sys = ids < R
+    rec0 = state["recovered"]
+    recovered = rec0.at[jnp.clip(ids, 0, R - 1)].max(received & is_sys)
+    new_src = recovered & ~rec0
+    pid = jnp.clip(jnp.mod(ids - R, P), 0, P - 1)
+    rx = state["rx"].at[pid].max(received & ~is_sys)
+    res_deg = state["res_deg"] - _deg_drop(tables, new_src)
+    return peel(dict(state, recovered=recovered, rx=rx, res_deg=res_deg),
+                tables)
+
+
+# ---------------------------------------------------------------------------
+# Time-exact decode completion (the honest replacement for the packet count)
+# ---------------------------------------------------------------------------
+
+def _closure_success(rec0, rx, tables, deg) -> jnp.ndarray:
+    """Peel a from-scratch received set to its fixpoint; True iff it decodes."""
+    res0 = deg - _deg_drop(tables, rec0)
+
+    def cond(carry):
+        recovered, res_deg = carry
+        return ((rx & (res_deg == 1)).any()) & ~recovered.all()
+
+    def body(carry):
+        recovered, res_deg = carry
+        recovered, res_deg, _ = peel_round(recovered, res_deg, rx, tables)
+        return recovered, res_deg
+
+    recovered, _ = jax.lax.while_loop(cond, body, (rec0, res0))
+    return recovered.all()
+
+
+def decode_completion(
+    tr: jnp.ndarray,
+    tables: DecoderTables,
+    R: int,
+    tx_end: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exact decode-success completion time from the (N, M) arrival table.
+
+    Sorts all result arrivals by time and binary-searches the shortest
+    prefix whose coded-id set peels to a full decode (success is monotone in
+    the prefix, so the search is exact: the collector, decoding eagerly as
+    results arrive, finishes at precisely ``T``).  Returns ``(T, valid,
+    k_star)`` — ``k_star`` the number of result arrivals consumed, so
+    ``k_star - R`` is the *measured* LT overhead of this rep; ``valid``
+    applies the same horizon certification as
+    :func:`repro.core.simulator.completion_time` and is False when even the
+    full horizon's arrivals cannot decode (caller re-runs with a larger M).
+    """
+    N, M = tr.shape
+    P = tables["idx"].shape[0]
+    nm = N * M
+    deg = tables["mask"].sum(axis=1).astype(jnp.int32)
+    ids = (jnp.arange(M, dtype=jnp.int32)[None, :] * N
+           + jnp.arange(N, dtype=jnp.int32)[:, None])
+    flat_tr = tr.reshape(-1)
+    order = jnp.argsort(flat_tr)
+    st_tr = flat_tr[order]
+    st_ids = ids.reshape(-1)[order]
+    n_fin = jnp.isfinite(flat_tr).sum().astype(jnp.int32)
+    is_sys = st_ids < R
+    sid = jnp.clip(st_ids, 0, R - 1)
+    pid = jnp.clip(jnp.mod(st_ids - R, P), 0, P - 1)
+    pos = jnp.arange(nm, dtype=jnp.int32)
+
+    def success(k):
+        take = pos < k
+        rec0 = jnp.zeros((R,), bool).at[sid].max(take & is_sys)
+        rx = jnp.zeros((P,), bool).at[pid].max(take & ~is_sys)
+        return _closure_success(rec0, rx, tables, deg)
+
+    ok_all = success(n_fin)
+    iters = int(math.ceil(math.log2(max(nm, 2)))) + 2
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        s = success(mid)
+        return jnp.where(s, lo, mid + 1), jnp.where(s, mid, hi)
+
+    lo0 = jnp.int32(min(R, nm))  # fewer than R arrivals can never decode
+    k_star = jax.lax.fori_loop(0, iters, body, (lo0, n_fin))[1]
+    t = jnp.where(ok_all, st_tr[jnp.clip(k_star - 1, 0, nm - 1)], jnp.inf)
+    if tx_end is not None:
+        valid = ok_all & jnp.isfinite(t) & (t <= jnp.min(tx_end))
+    else:
+        valid = ok_all & (t <= jnp.min(tr[:, -1]))
+    return t, valid, k_star
+
+
+def finalize_decode(outs: dict, aux: dict, R: int, tx_end) -> Tuple:
+    """The shared ``Policy.finalize`` body of the decoder-in-the-loop
+    policies: time-exact decode-success completion from the stream trace
+    (k_star stays internal; the measured overhead is ``r_n.sum() - R``)."""
+    t, valid, _k_star = decode_completion(
+        outs["tr"], aux["decoder"]["tables"], R, tx_end=tx_end)
+    return t, valid
+
+
+def offline_overhead_samples(
+    R: int,
+    code: fountain.LTCode,
+    p_loss: float,
+    trials: int = 32,
+    seed: int = 0,
+) -> np.ndarray:
+    """Offline Monte-Carlo of the arrivals-to-decode overhead (host-side).
+
+    Mimics the engine's stream: coded ids go out in slot order, each is
+    erased i.i.d. with ``p_loss``, and the survivors are absorbed in order
+    until the peeling closure covers all R sources.  Returns the per-trial
+    ``k_star - R`` samples (``-1`` when the whole pool cannot decode) — the
+    reference distribution the in-engine ``rateless_ccp`` measurement is
+    validated against (and the empirical face of the robust-soliton
+    overhead bound that :func:`fountain.decode_failure_prob` quantifies).
+    """
+    rng = np.random.default_rng(seed)
+    n_rows = code.n_coded
+    out = np.empty(trials, dtype=np.int64)
+    for t in range(trials):
+        kept = np.flatnonzero(rng.random(n_rows) >= p_loss)
+        lo, hi, ans = R, kept.size, -1
+        if kept.size >= R and fountain.peel_decode_plan(code, kept) is not None:
+            while lo <= hi:
+                mid = (lo + hi) // 2
+                if fountain.peel_decode_plan(code, kept[:mid]) is not None:
+                    ans, hi = mid, mid - 1
+                else:
+                    lo = mid + 1
+        out[t] = ans - R if ans >= 0 else -1
+    return out

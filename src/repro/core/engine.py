@@ -21,10 +21,10 @@ Typical usage::
     res = eng.run(cfg, "adaptive_rate", keys, R=2000)   # name or Policy
     res.T, res.efficiency, res.valid                    # RunResult pytree
 
-The legacy string-dispatch surface (``simulator.run_batch(mode=...)``,
-``run_ccp/best/naive/naive_oracle``, ``simulate_stream(mode=...)``) is a
-thin deprecated shim over this module, pinned bit-for-bit by the golden
-tests in ``tests/test_policies.py``.
+The PR-2 string-dispatch surface (``simulator.run_batch(mode=...)``,
+``run_ccp/best/naive/naive_oracle``, ``simulate_stream(mode=...)``) was
+removed in PR 4; the golden tests in ``tests/test_policies.py`` still pin
+``Engine.run`` bit-for-bit against its recorded outputs.
 """
 
 from __future__ import annotations
@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ccp as ccp_mod
+from . import decode as decode_mod
 from . import policies as policies_mod
 from . import simulator as sim
 
@@ -90,12 +91,19 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
             period, max_backoff, outage_dist, ge_on, cell_on = churn_static
         window = period * dyn["speed"].shape[1]
 
+    use_dec = bool(policy.uses_decoder)
     carry0 = dict(
         tx=jnp.zeros(N),              # send time of current packet (Tx_{n,1}=0)
         done_prev=jnp.zeros(N),
         tr_prev=jnp.zeros(N),
         pstate=policy.init(N),
     )
+    if use_dec:
+        # Incremental peeling decoder riding the scan carry: prepare() puts
+        # the parity-pool tables + zero state under aux["decoder"].
+        carry0["dec"] = aux["decoder"]["state0"]
+        carry0["dec_t_hi"] = jnp.float32(0.0)   # max received tr so far
+        carry0["dec_t_done"] = jnp.float32(jnp.inf)  # t_hi when done fired
     xs = dict(
         beta=beta.T, d_up=d_up.T, d_ack=d_ack.T, d_down=d_down.T,
         i=jnp.arange(M),
@@ -109,31 +117,38 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
 
     def step(carry, x):
         tx = carry["tx"]
+        # A policy may stop a helper's stream by emitting tx = +inf
+        # (permanent: decoder-feedback policies stop once decode succeeds).
+        # Unsent packets are non-events: no loss, no idle, no receipt —
+        # churn lookups run on clamped times so no inf reaches an index op.
+        sent = jnp.isfinite(tx)
         arrive = tx + x["d_up"]
         start = jnp.maximum(arrive, carry["done_prev"])
+        t_arr = jnp.where(sent, arrive, 0.0)
+        t_sta = jnp.where(sent, start, 0.0)
         if churn:
             # Outage if the helper is down when the packet arrives or when
             # it would start computing; degraded phases stretch the runtime
             # (beta = a + eps/mu, so (beta-a)/speed rescales the random part).
             if outage_dist == "phase":
-                is_up = (sim._phase_lookup(dyn["up"], arrive, period)
-                         & sim._phase_lookup(dyn["up"], start, period))
+                is_up = (sim._phase_lookup(dyn["up"], t_arr, period)
+                         & sim._phase_lookup(dyn["up"], t_sta, period))
             else:
                 is_up = ~(sim._interval_hit(dyn["out_start"], dyn["out_end"],
-                                            arrive, window)
+                                            t_arr, window)
                           | sim._interval_hit(dyn["out_start"], dyn["out_end"],
-                                              start, window)).any(axis=1)
+                                              t_sta, window)).any(axis=1)
             if cell_on:
                 in_cell = dyn["cell_mask"] & (
                     sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
-                                      arrive, window)
+                                      t_arr, window)
                     | sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
-                                        start, window)
+                                        t_sta, window)
                 )
                 is_up &= ~in_cell.any(axis=1)
-            sp = sim._phase_lookup(dyn["speed"], start, period)
+            sp = sim._phase_lookup(dyn["speed"], t_sta, period)
             beta_i = jnp.where(sp == 1.0, x["beta"], a + (x["beta"] - a) / sp)
-            lost = x["drop"] | ~is_up
+            lost = (x["drop"] | ~is_up) & sent
         else:
             beta_i = x["beta"]
             lost = jnp.zeros((N,), bool)
@@ -143,27 +158,52 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
             # lost to an outage — the radio fades regardless).
             p_bad, p_good, l_good, l_bad = dyn["ge_params"]
             bad = carry["ge_bad"]
-            lost |= x["ge_u_loss"] < jnp.where(bad, l_bad, l_good)
+            lost |= (x["ge_u_loss"] < jnp.where(bad, l_bad, l_good)) & sent
             ge_bad_next = jnp.where(
                 bad, x["ge_u_trans"] >= p_good, x["ge_u_trans"] < p_bad
             )
-        received = ~lost
+        received = ~lost & sent
         done_ok = start + beta_i
         tr_ok = done_ok + x["d_down"]
         # A lost packet never occupies the helper nor reaches the collector.
         done = jnp.where(lost, carry["done_prev"], done_ok)
-        tr = jnp.where(lost, jnp.inf, tr_ok)
+        tr = jnp.where(received, tr_ok, jnp.inf)
         idle = jnp.where(
-            lost, 0.0, jnp.maximum(arrive - carry["done_prev"], 0.0)
+            received, jnp.maximum(arrive - carry["done_prev"], 0.0), 0.0
         )
         rtt_ack = x["d_up"] + x["d_ack"]
+
+        if use_dec:
+            # Absorb this step's result arrivals into the peeling decoder
+            # before the hooks run: the feedback a policy sees at step i is
+            # everything an eagerly-decoding collector has recovered from
+            # packets 0..i (see docs/policies.md for the causality note).
+            dec = decode_mod.absorb(
+                carry["dec"], aux["decoder"]["tables"],
+                decode_mod.slot_ids(x["i"], N), received,
+            )
+            # Real-time bound on the decode instant: every absorbed result
+            # has arrived by t_hi, so when done first fires the collector
+            # provably holds a decodable set by then (StepCtx doc).
+            t_hi = jnp.maximum(
+                carry["dec_t_hi"], jnp.where(received, tr_ok, 0.0).max()
+            )
+            t_done = jnp.where(
+                dec["done"] & ~jnp.isfinite(carry["dec_t_done"]),
+                t_hi, carry["dec_t_done"],
+            )
+            dec_kw = dict(decoded_count=dec["count"], ripple=dec["ripple"],
+                          decode_done=dec["done"], decode_t_done=t_done)
+        else:
+            dec = None
+            dec_kw = {}
 
         ctx = policies_mod.StepCtx(
             i=x["i"], n=N, tx=tx, arrive=arrive, start=start, beta=beta_i,
             tr_ok=tr_ok, lost=lost, received=received, rtt_ack=rtt_ack,
             d_up=x["d_up"], d_down=x["d_down"], d_ack=x["d_ack"],
             tr_prev=carry["tr_prev"], cfg=cfg, max_backoff=max_backoff,
-            aux=aux,
+            aux=aux, **dec_kw,
         )
         pstate = policy.on_computed(carry["pstate"], ctx)
         tx_next = policy.next_load(pstate, ctx)
@@ -178,16 +218,26 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
         )
         if ge_on:
             new_carry["ge_bad"] = ge_bad_next
+        if use_dec:
+            new_carry["dec"] = dec
+            new_carry["dec_t_hi"] = t_hi
+            new_carry["dec_t_done"] = t_done
         b = policy.backoff(pstate)
-        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive, beta=beta_i,
-                   lost=lost,
+        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive,
+                   beta=jnp.where(sent, beta_i, 0.0), lost=lost,
                    backoff=b if b is not None else jnp.ones(N))
         return new_carry, out
 
     final, outs = jax.lax.scan(step, carry0, xs)
     res = {k: v.T for k, v in outs.items()}  # (N, M)
     res["tx_end"] = final["tx"]
-    return res, policy.summary(final["pstate"])
+    psum = policy.summary(final["pstate"])
+    if use_dec:
+        # Surface the end-of-horizon decoder state next to the policy's own
+        # summary scalars (-> RunResult.extras dec_count / dec_done).
+        psum = dict(psum, dec_count=final["dec"]["count"],
+                    dec_done=final["dec"]["done"])
+    return res, psum
 
 
 # ---------------------------------------------------------------------------
@@ -232,7 +282,15 @@ def _sim_one(key, cfg, R: int, M: int, policy) -> Dict[str, jnp.ndarray]:
     # the inf sentinels in tr_eff must not count as delivered packets.
     r_n = (jnp.isfinite(tr_eff) & (tr_eff <= t)).sum(axis=1)
     max_backoff = outs["backoff"].max(axis=1)
-    lost_frac = outs["lost"].mean(axis=1)
+    # Loss rate over packets actually *sent*: a decoder-feedback policy that
+    # stops a stream early must not have its never-sent tail slots (lost =
+    # False by construction) dilute the reported rate.  Expressed as a
+    # rescale of mean() so always-sending policies (n_sent == M, scale
+    # exactly 1.0) stay bit-identical to the pre-PR-4 goldens.
+    n_sent = jnp.isfinite(outs["tx"]).sum(axis=1)
+    m_steps = outs["lost"].shape[1]
+    lost_frac = outs["lost"].mean(axis=1) * (
+        m_steps / jnp.maximum(n_sent, 1))
     res = dict(T=t, valid=valid, efficiency=eff, r_n=r_n, mu=mu, a=a,
                rate=rate, max_backoff=max_backoff, lost_frac=lost_frac)
     for k in getattr(policy, "report_aux", ()):
@@ -295,6 +353,21 @@ def _m_cap(cfg, kk: int, policy) -> int:
     return factor * kk
 
 
+def _initial_m(base_m: int, cfg, R: int, kk: int, cap: int, policy,
+               M_override: Optional[int]) -> int:
+    """Starting horizon shared by the batched and sequential runners: the
+    engine heuristic ``base_m``, clamped by the policy's ``horizon_hint``
+    (block policies: ~R/N packets) and the cap.  Certification doubling
+    backstops a hint that guessed low."""
+    if M_override is not None:
+        return min(M_override, cap)
+    m = base_m
+    hint = policy.horizon_hint(cfg, R, kk)
+    if hint is not None:
+        m = min(m, max(int(hint), 32))
+    return min(m, cap)
+
+
 # ---------------------------------------------------------------------------
 # RunResult + Engine
 # ---------------------------------------------------------------------------
@@ -334,8 +407,8 @@ class RunResult:
     M: int
     policy: str
 
-    # dict-style access keeps the legacy ``run_batch`` consumers (and the
-    # shared benchmark helpers) working on either representation.
+    # dict-style access keeps dict-shaped consumers (the shared benchmark
+    # helpers) working on either representation.
     def __getitem__(self, key):
         d = self.as_dict()
         return d[key]
@@ -380,8 +453,8 @@ class Engine:
         keys = jnp.asarray(keys)
         kk = R + cfg.K(R)
         cap = _m_cap(cfg, kk, policy)
-        M = M_override if M_override is not None else sim._horizon_shared(cfg, R)
-        M = min(M, cap)
+        M = _initial_m(sim._horizon_shared(cfg, R), cfg, R, kk, cap, policy,
+                       M_override)
         for _ in range(8):
             if shard:
                 out = _sim_batch_sharded(keys, cfg, R, M, policy, devices)
@@ -404,8 +477,8 @@ class Engine:
         mu, a, _rate = sim.draw_helpers(k_h, cfg)
         kk = R + cfg.K(R)
         cap = _m_cap(cfg, kk, policy)
-        M = M_override if M_override is not None else sim._horizon(cfg, mu, a, R)
-        M = min(M, cap)
+        M = _initial_m(sim._horizon(cfg, mu, a, R), cfg, R, kk, cap, policy,
+                       M_override)
         for _ in range(8):  # grow horizon until completion is certified
             out = _sim_one_jit(key, cfg, R, M, policy)
             if bool(out["valid"]) or M >= cap or M_override is not None:

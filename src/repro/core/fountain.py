@@ -34,7 +34,9 @@ __all__ = [
     "encode",
     "encode_ref",
     "DecodePlan",
+    "PlanRound",
     "peel_decode_plan",
+    "plan_rounds",
     "apply_decode_plan",
     "decode",
     "decode_failure_prob",
@@ -404,6 +406,62 @@ def peel_decode_plan(
         order_nbr_coef=nbr_coef,
         R=R,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRound:
+    """One dependency level of a peeling plan (see :func:`plan_rounds`).
+
+    All ``S`` sources of a round depend only on sources recovered in earlier
+    rounds (or directly), so the whole round is one batched masked
+    gather-subtract — the unit of work of the ``kernels/lt_decode`` Pallas
+    kernel.  ``coded``/``src``/``pivot`` are (S,); ``nbr_idx``/``nbr_coef``
+    are (S, d_max) with coef 0 = padding.
+    """
+
+    coded: np.ndarray
+    src: np.ndarray
+    pivot: np.ndarray
+    nbr_idx: np.ndarray
+    nbr_coef: np.ndarray
+
+    @property
+    def size(self) -> int:
+        return int(self.src.shape[0])
+
+
+def plan_rounds(plan: DecodePlan) -> list:
+    """Levelize a sequential :class:`DecodePlan` into parallel rounds.
+
+    Step ``t`` recovers ``order_src[t]`` by subtracting already-recovered
+    neighbours; its *round* is ``1 + max(round of those neighbours)`` with
+    directly-received (degree-1) sources at round 0.  Steps inside one round
+    are mutually independent, so a round executes as a single batched peel —
+    the round count is the decode's critical path, typically O(log R) deep
+    versus the O(R) sequential scan of :func:`apply_decode_plan`.
+    """
+    depth = np.full(plan.R, -1, dtype=np.int64)
+    depth[plan.direct_src] = 0
+    T = plan.n_peeled
+    step_round = np.zeros(T, dtype=np.int64)
+    for t in range(T):
+        nbrs = plan.order_nbr_idx[t][plan.order_nbr_coef[t] != 0]
+        d = 1 + (int(depth[nbrs].max()) if nbrs.size else 0)
+        assert nbrs.size == 0 or depth[nbrs].min() >= 0, \
+            "plan step depends on an unrecovered source"
+        depth[plan.order_src[t]] = d
+        step_round[t] = d
+    rounds = []
+    for d in range(1, int(step_round.max(initial=0)) + 1):
+        sel = np.flatnonzero(step_round == d)
+        rounds.append(PlanRound(
+            coded=plan.order_coded[sel],
+            src=plan.order_src[sel],
+            pivot=plan.order_pivot[sel],
+            nbr_idx=plan.order_nbr_idx[sel],
+            nbr_coef=plan.order_nbr_coef[sel],
+        ))
+    return rounds
 
 
 def apply_decode_plan(coded_rx: jnp.ndarray, plan: DecodePlan) -> jnp.ndarray:

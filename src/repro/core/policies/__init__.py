@@ -3,14 +3,16 @@
 Every policy is a frozen-dataclass plugin implementing the
 :class:`~repro.core.policies.base.Policy` protocol and registered under a
 string name; :func:`get`/:func:`names` are the registry surface used by
-``Engine.run``, the ``run_batch(mode=...)`` compat shims, and the
-benchmark ``--policies`` flag.
+``Engine.run`` and the benchmark ``--policies`` flag.
 
 Built-ins: ``ccp`` (Algorithm 1), ``best`` (oracle TTI), ``naive`` /
 ``naive_oracle`` (stop-and-wait with static / oracle ARQ timer),
 ``uncoded_mean`` / ``uncoded_mu`` and ``hcmm`` (block baselines, ported
-from the sequential NumPy path into the vmapped scan), and
-``adaptive_rate`` (measured-loss code-rate adaptation).
+from the sequential NumPy path into the vmapped scan), ``adaptive_rate``
+(measured-loss code-rate adaptation), ``rateless_ccp`` (decoder-in-the-loop
+completion: the task is done when the LT peeling decode actually succeeds),
+and ``adaptive_rate_fb`` (code-rate adaptation that also stops sending —
+drops the residual K — on ``StepCtx.decode_done``).
 
 See ``docs/policies.md`` for the protocol contract and a worked example
 of registering a custom policy.
@@ -19,16 +21,19 @@ of registering a custom policy.
 from .base import RING, Policy, StepCtx, get, names, register  # noqa: F401
 
 # Importing the modules registers the built-ins.
-from . import adaptive_rate, best, ccp, hcmm, naive, uncoded  # noqa: F401, E402
+from . import (  # noqa: F401, E402
+    adaptive_rate, best, ccp, hcmm, naive, rateless, uncoded,
+)
 from .adaptive_rate import AdaptiveRatePolicy  # noqa: F401
 from .best import BestPolicy  # noqa: F401
 from .ccp import CCPPolicy  # noqa: F401
 from .hcmm import HCMMPolicy  # noqa: F401
 from .naive import NaivePolicy  # noqa: F401
+from .rateless import RatelessCCPPolicy  # noqa: F401
 from .uncoded import UncodedPolicy  # noqa: F401
 
 __all__ = [
     "RING", "Policy", "StepCtx", "get", "names", "register",
     "CCPPolicy", "BestPolicy", "NaivePolicy", "UncodedPolicy",
-    "HCMMPolicy", "AdaptiveRatePolicy",
+    "HCMMPolicy", "AdaptiveRatePolicy", "RatelessCCPPolicy",
 ]

@@ -24,6 +24,18 @@ response to measured loss rate ``p`` is to raise the sending overhead by
 Under the Gilbert–Elliott burst-loss regime this beats fixed-K CCP's
 completion delay (pinned by the fig_churn smoke lane); under pure outages
 (``consec >= outage_run``) it degenerates to CCP's capped backoff.
+
+Decoder feedback (``adaptive_rate_fb``)
+---------------------------------------
+With ``decoder_feedback=True`` the policy closes the remaining loop the
+ROADMAP asked for: the engine runs the incremental peeling decoder of
+:mod:`repro.core.decode` in the scan and the policy *drops the residual
+overhead* the moment ``StepCtx.decode_done`` fires — ``next_load`` returns
+``+inf`` (stop sending), so the provisioned K sheds to the K the decode
+actually needed, and ``finalize`` reports the honest decode-success
+completion time instead of the packet count.  With ``decoder_feedback=False``
+(the registered ``adaptive_rate``) the policy is bit-for-bit the PR-3
+send-side adapter, so the zero-churn == CCP pin still holds.
 """
 
 from __future__ import annotations
@@ -33,21 +45,31 @@ import dataclasses
 import jax.numpy as jnp
 
 from .. import ccp as ccp_mod
+from .. import decode as decode_mod
 from .base import StepCtx, register
 from .ccp import CCPPolicy
 
 
-@register
 @dataclasses.dataclass(frozen=True)
 class AdaptiveRatePolicy(CCPPolicy):
     """CCP + measured-loss code-rate adaptation (see module docstring)."""
 
-    name = "adaptive_rate"
     version = 1
 
     loss_ewma: float = 0.1   # EWMA weight of the per-helper loss estimate
     p_clip: float = 0.5      # cap on the rate-compensation (overhead <= 2x)
     outage_run: int = 4      # consecutive losses before backoff engages
+    #: close the loop with the fountain decoder: stop sending (drop the
+    #: residual K) on StepCtx.decode_done and finalize at decode success
+    decoder_feedback: bool = False
+
+    @property
+    def name(self) -> str:
+        return "adaptive_rate_fb" if self.decoder_feedback else "adaptive_rate"
+
+    @property
+    def uses_decoder(self) -> bool:
+        return self.decoder_feedback
 
     def init(self, n: int):
         state = super().init(n)
@@ -83,10 +105,50 @@ class AdaptiveRatePolicy(CCPPolicy):
             state["est"], ctx.lost & (consec >= self.outage_run),
             max_backoff=ctx.max_backoff,
         )
-        return (
-            dict(state, est=est, p_hat=p_hat, consec=consec),
-            ctx.tx + deadline,
-        )
+        tx_retx = ctx.tx + deadline
+        if self.decoder_feedback:
+            # No point retransmitting a symbol the finished decode no
+            # longer needs (same time gate as next_load).
+            tx_retx = jnp.where(
+                ctx.decode_done & (tx_retx >= ctx.decode_t_done),
+                jnp.inf, tx_retx)
+        return dict(state, est=est, p_hat=p_hat, consec=consec), tx_retx
+
+    def prepare(self, cfg, R: int, ccp_cfg, mu, a, rate) -> dict:
+        aux = super().prepare(cfg, R, ccp_cfg, mu, a, rate)
+        if not self.decoder_feedback:
+            return aux
+        return dict(aux, decoder=decode_mod.decoder_aux(R))
+
+    def next_load(self, state, ctx: StepCtx) -> jnp.ndarray:
+        tx = super().next_load(state, ctx)
+        if self.decoder_feedback:
+            # Drop the residual overhead once the decode has succeeded.  The
+            # gate is the *time* bound, not the step-aligned done flag: the
+            # scan absorbs packet i of every helper at step i, but a slow
+            # helper's step-i result arrives later than a fast helper's
+            # step-i+k one, so a send scheduled before decode_t_done can
+            # still beat the decodable set already in flight — only sends at
+            # or past decode_t_done are provably useless (StepCtx doc).
+            tx = jnp.where(
+                ctx.decode_done & (tx >= ctx.decode_t_done), jnp.inf, tx)
+        return tx
+
+    def finalize(self, outs, aux, cfg, R: int, kk: int, tx_end):
+        if not self.decoder_feedback:
+            return super().finalize(outs, aux, cfg, R, kk, tx_end)
+        return decode_mod.finalize_decode(outs, aux, R, tx_end)
 
     def summary(self, state) -> dict:
         return {"p_hat": state["p_hat"]}
+
+
+register("adaptive_rate", factory=AdaptiveRatePolicy)
+# Decode-aware variant: a tighter outage window (2 instead of 4 consecutive
+# losses) because in decoder-land a send wasted into an outage burns a
+# *distinct* coded symbol, not just pacing budget — spamming through a
+# whole-cell outage measurably delays the decode (fig_churn cell regime),
+# so the policy concedes to the backoff one loss earlier.
+register("adaptive_rate_fb",
+         factory=lambda: AdaptiveRatePolicy(decoder_feedback=True,
+                                            outage_run=2))

@@ -40,6 +40,26 @@ only, no Python branches on traced values):
     Per-helper scalars from the final policy state, surfaced in
     :class:`repro.core.engine.RunResult` extras (e.g. ``adaptive_rate``'s
     measured loss estimate).
+``horizon_hint(cfg, R, kk) -> int | None``
+    Optional scan-horizon hint: an upper-bound guess on the packets per
+    helper the policy actually needs.  Block policies send only ~R/N
+    packets per helper, so hinting a small horizon cuts their scan cost
+    ~4x; the engine still doubles the horizon (up to ``m_cap_factor *
+    kk``) whenever certification fails, so an under-estimate costs one
+    re-run, never correctness.  ``None`` (default): the engine's shared
+    heuristic.
+
+Decoder feedback (``uses_decoder = True``): the engine additionally runs
+the incremental peeling decoder of :mod:`repro.core.decode` inside the
+scan and exposes ``StepCtx.decoded_count`` / ``StepCtx.ripple`` /
+``StepCtx.decode_done`` to every hook.  Such a policy's ``prepare`` must
+return the decode tables under ``aux["decoder"]`` as ``{"tables":
+decode.make_tables(code), "state0": decode.init_state(R, tables)}`` (see
+``policies/rateless.py``); its ``finalize`` typically replaces the packet
+count with :func:`repro.core.decode.decode_completion`.  A policy may
+stop a helper's stream by returning ``+inf`` from ``next_load`` — the
+engine treats never-sent packets as non-events (not losses, no idle, no
+decoder absorb).
 
 Policies are frozen dataclasses (hashable) so a policy instance can be a
 static jit argument; per-rep data must flow through ``aux``/``state``,
@@ -88,6 +108,21 @@ class StepCtx:
     cfg: object             # repro.core.ccp.CCPConfig
     max_backoff: Optional[float]  # churn backoff cap (None when static)
     aux: dict               # policy.prepare() output
+    # Decoder feedback (populated only when policy.uses_decoder; else None).
+    # Step-aligned: reflects every result absorbed through scan step i, the
+    # latest information a collector decoding eagerly could have fed back.
+    decoded_count: Optional[jnp.ndarray] = None  # () i32 recovered sources
+    ripple: Optional[jnp.ndarray] = None         # () i32 released this step
+    decode_done: Optional[jnp.ndarray] = None    # () bool all R recovered
+    # Real-time upper bound on the decode completion instant: the max
+    # arrival time over the absorbed set when decode_done first fired (+inf
+    # until then).  The scan is step-aligned, not time-aligned — a slow
+    # helper's step-s result can arrive *later* than a fast helper's
+    # step-s+k one — so a send at tx < decode_t_done may still beat the
+    # decodable set already in flight; only sends at tx >= decode_t_done
+    # are provably useless.  Stop rules must gate on this, not on
+    # decode_done alone.
+    decode_t_done: Optional[jnp.ndarray] = None  # () f32 (+inf before done)
 
 
 class Policy:
@@ -97,6 +132,9 @@ class Policy:
     version: int = 1
     #: horizon-cap multiple of R+K (None -> engine default: 1 static/4 churn)
     m_cap_factor: Optional[int] = None
+    #: True -> the engine runs the incremental peeling decoder in the scan
+    #: and populates StepCtx.decoded_count/ripple/decode_done (module doc).
+    uses_decoder: bool = False
 
     def prepare(self, cfg, R: int, ccp_cfg, mu, a, rate) -> dict:
         return {}
@@ -125,6 +163,9 @@ class Policy:
 
     def summary(self, state) -> dict:
         return {}
+
+    def horizon_hint(self, cfg, R: int, kk: int) -> Optional[int]:
+        return None
 
     def __repr__(self) -> str:  # registry name is the canonical identity
         return f"<policy {self.name!r} v{self.version}>"

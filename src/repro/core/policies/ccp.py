@@ -1,7 +1,7 @@
 """CCP (Algorithm 1) as a first-class policy.
 
 The arithmetic is the paper-faithful port of the former ``mode="ccp"``
-branch of ``simulate_stream``: eq. (8) pacing from the ring-buffered
+string branch of the PR-2 simulator: eq. (8) pacing from the ring-buffered
 ``E[beta]`` estimate in effect at the send instant, and — under churn —
 the lines 13-14 timeout/backoff path.  The golden-equivalence tests pin
 this bit-for-bit against the pre-redesign string dispatch.

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 from .base import Policy, StepCtx, register
 
@@ -72,6 +73,23 @@ class UncodedPolicy(Policy):
         else:
             raise ValueError(f"unknown uncoded rule {self.rule!r}")
         return {"loads": largest_remainder_round(R * w / w.sum(), R)}
+
+    def horizon_hint(self, cfg, R: int, kk: int):
+        """Block policies send ~R/N packets per helper, not the engine's
+        CCP-sized M: hint the expected largest block (the fastest helper
+        class's share of R under this policy's *own* allocation weights)
+        with headroom, bucketed to a power of two.  A helper draw whose
+        block exceeds the hint fails certification (``loads.max() > M``)
+        and the engine doubles M — one re-run, never a wrong result."""
+        from .. import simulator  # lazy: avoids import cycle at registration
+
+        mu, _a, w_mean = simulator.class_weights(cfg)
+        # same weights prepare() allocates with ('mean' also approximates
+        # the HCMM lambda* well enough for a hint — certification backstops)
+        w = mu if self.rule == "mu" else w_mean
+        share = float(w.max() / (cfg.N * w.mean()))
+        m = int(np.ceil(1.5 * kk * share)) + 32
+        return 1 << int(np.ceil(np.log2(max(m, 32))))
 
     def next_load(self, state, ctx: StepCtx):
         # Back-to-back uplink: send packet i+1 the moment packet i's

@@ -79,13 +79,14 @@ so helpers that rejoin are re-ramped.  ``churn=None`` (default) runs the
 exact static paper model, and a ``ChurnConfig`` with every loss knob at
 zero is bit-for-bit identical to it.
 
-Policy engine (PR 3)
---------------------
+Policy engine (PR 3, mode-string shims removed in PR 4)
+-------------------------------------------------------
 The per-mode logic that used to live in string branches here is now a set
 of first-class :mod:`repro.core.policies` plugins driven by
 :class:`repro.core.engine.Engine` — one scan, one vmapped/sharded
 Monte-Carlo path for every policy (CCP, Best, Naive, the uncoded/HCMM
-block baselines, and the adaptive code-rate policy).  Typical usage::
+block baselines, the adaptive code-rate policy, and the decoder-in-the-loop
+rateless policies).  Typical usage::
 
     from repro.core import engine, simulator
     keys = simulator.batch_keys(reps=40, seed0=0)
@@ -93,19 +94,22 @@ block baselines, and the adaptive code-rate policy).  Typical usage::
     res.T            # (reps,) completion times
     res.efficiency   # (reps, N) per-helper measured efficiency
 
-The mode-string surface below (``run_batch(mode=...)``, ``run_ccp`` /
-``run_best`` / ``run_naive`` / ``run_naive_oracle``, and
-``simulate_stream(mode=...)``) is kept as thin deprecated shims over the
-engine, pinned bit-for-bit by golden tests; ``shard=True`` still splits
-the key batch over the local devices through ``shard_map``.
+The PR-2 mode-string surface (``run_batch(mode=...)``, ``run_ccp`` /
+``run_best`` / ``run_naive`` / ``run_naive_oracle``,
+``simulate_stream(mode=...)``) was deprecated in PR 3 and **removed** in
+PR 4 once the pre-PR-3 benchmark artifacts were regenerated through the
+engine; the golden-equivalence tests in ``tests/test_policies.py`` still
+pin ``Engine.run`` bit-for-bit against the pre-redesign outputs.  This
+module keeps the scenario model: configs, random draws
+(``draw_helpers`` / ``draw_packet_tables`` / ``draw_dynamics``), the
+completion/efficiency extraction, and ``batch_keys``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import warnings
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,14 +125,10 @@ __all__ = [
     "draw_helpers",
     "draw_packet_tables",
     "draw_dynamics",
-    "simulate_stream",
+    "class_weights",
     "completion_time",
+    "efficiency_measured",
     "batch_keys",
-    "run_batch",
-    "run_ccp",
-    "run_best",
-    "run_naive",
-    "run_naive_oracle",
     "KEY_SCHEDULE",
     "RING",
 ]
@@ -260,8 +260,9 @@ class ChurnConfig:
                 and not self.cell_enabled)
 
     def static_key(self) -> tuple:
-        """Hashable tuple of the *structural* knobs ``simulate_stream``
-        specializes on (passed as its static ``churn_static`` argument)."""
+        """Hashable tuple of the *structural* knobs the engine scan
+        specializes on (the static ``churn_static`` argument of
+        ``engine.policy_stream``)."""
         return (self.period, self.max_backoff, self.outage_dist,
                 self.ge_enabled, self.cell_enabled)
 
@@ -447,41 +448,6 @@ def _interval_hit(start, end, t, window: float):
     return ((tm >= start) & (tm < end)) | (tm < (end - window))
 
 
-def simulate_stream(beta, d_up, d_ack, d_down, mode: str, cfg_static,
-                    churn_static=None, dyn=None, a=None, naive_to=None):
-    """Simulate M packets on every helper. Returns dict of (N, M) arrays
-    (plus ``tx_end`` (N,): the send time of the first unsimulated packet).
-
-    Deprecated mode-string shim over
-    :func:`repro.core.engine.policy_stream`: ``mode`` is resolved through
-    the policy registry (``'ccp'`` — Algorithm 1; ``'best'`` — oracle
-    TTI_{n,i} = beta_{n,i}, eq. 13; ``'naive'`` — stop-and-wait, eq. 16;
-    any other registered policy name also works).
-
-    cfg_static: hashable (Bx, Br, Back, alpha) tuple.
-    churn_static: ``ChurnConfig.static_key()`` — hashable (period,
-        max_backoff, outage_dist, ge_enabled, cell_enabled) — or the legacy
-        (period, max_backoff) 2-tuple (phase outages only), or None for the
-        static paper model.  When set, ``dyn`` (from :func:`draw_dynamics`),
-        ``a`` (N,) runtime offsets, and — for 'naive' — ``naive_to`` (N,)
-        fixed retransmission timeouts must be provided.
-    """
-    from . import engine, policies
-
-    warnings.warn(
-        "simulate_stream(mode=...) is deprecated; use "
-        "engine.policy_stream(policy=policies.get(mode), ...)",
-        DeprecationWarning, stacklevel=2,
-    )
-    aux = {} if naive_to is None else {"naive_to": naive_to}
-    outs, _ = engine.policy_stream(
-        beta, d_up, d_ack, d_down, policy=policies.get(mode),
-        cfg_static=cfg_static, churn_static=churn_static, dyn=dyn, a=a,
-        aux=aux,
-    )
-    return outs
-
-
 # ---------------------------------------------------------------------------
 # Completion-time + efficiency extraction
 # ---------------------------------------------------------------------------
@@ -521,17 +487,8 @@ def efficiency_measured(tr, idle, beta, t_end) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# One Monte-Carlo rep — mode-string shim over the policy engine
+# Shared horizon heuristics (used by engine.Engine)
 # ---------------------------------------------------------------------------
-
-def _sim_one(key, cfg: ScenarioConfig, R: int, M: int, mode: str):
-    """Full single-rep pipeline as a traceable function of ``key``; the
-    mode string is resolved through the policy registry (every registered
-    policy works, not just the four legacy modes)."""
-    from . import engine, policies
-
-    return engine._sim_one(key, cfg, R, M, policies.get(mode))
-
 
 def _m_cap(cfg: ScenarioConfig, kk: int) -> int:
     # Static: every helper streams back-to-back, so M = R+K always certifies.
@@ -554,58 +511,22 @@ def _horizon(cfg: ScenarioConfig, mu, a, R: int) -> int:
     return _bucketed_horizon(cfg, float(w.max() / w.sum()), k)
 
 
+def class_weights(cfg: ScenarioConfig):
+    """Per-mu-class ``(mu, a, 1/E[beta])`` arrays from the choice set — the
+    one place the ``a_mode`` mapping lives for horizon heuristics (shared
+    by :func:`_horizon_shared` and the block policies' ``horizon_hint``)."""
+    mu = np.asarray(cfg.mu_choices, dtype=np.float64)
+    a = 1.0 / mu if cfg.a_mode == "inv_mu" else np.full_like(mu, cfg.a_const)
+    return mu, a, 1.0 / theory.shifted_exp_mean(a, mu)
+
+
 def _horizon_shared(cfg: ScenarioConfig, R: int) -> int:
     """Key-independent horizon for the batched runner: the expected fastest
     helper's share from the mu/a choice set (certification re-runs with a
     doubled horizon when a draw lands above it)."""
     k = R + cfg.K(R)
-    mu = np.asarray(cfg.mu_choices, dtype=np.float64)
-    a = 1.0 / mu if cfg.a_mode == "inv_mu" else np.full_like(mu, cfg.a_const)
-    w = 1.0 / theory.shifted_exp_mean(a, mu)
+    _mu, _a, w = class_weights(cfg)
     return _bucketed_horizon(cfg, float(w.max() / (cfg.N * w.mean())), k)
-
-
-# ---------------------------------------------------------------------------
-# Top-level runners — deprecated mode-string shims over the policy engine
-# ---------------------------------------------------------------------------
-
-def _warn_mode_shim(fn: str, mode: str) -> None:
-    warnings.warn(
-        f"{fn} is a deprecated mode-string shim; use "
-        f"engine.Engine().run(cfg, policies.get({mode!r}), keys, R)",
-        DeprecationWarning, stacklevel=3,
-    )
-
-
-def _run_mode(key, cfg: ScenarioConfig, R: int, mode: str,
-              M_override: Optional[int] = None) -> Dict[str, np.ndarray]:
-    from . import engine, policies
-
-    return engine.Engine().run_one(
-        key, cfg, policies.get(mode), R, M_override=M_override
-    )
-
-
-def run_ccp(key, cfg: ScenarioConfig, R: int):
-    _warn_mode_shim("run_ccp", "ccp")
-    return _run_mode(key, cfg, R, "ccp")
-
-
-def run_best(key, cfg: ScenarioConfig, R: int):
-    _warn_mode_shim("run_best", "best")
-    return _run_mode(key, cfg, R, "best")
-
-
-def run_naive(key, cfg: ScenarioConfig, R: int):
-    _warn_mode_shim("run_naive", "naive")
-    return _run_mode(key, cfg, R, "naive")
-
-
-def run_naive_oracle(key, cfg: ScenarioConfig, R: int):
-    """Naive stop-and-wait with the per-helper oracle ARQ timer — only
-    meaningful under churn."""
-    _warn_mode_shim("run_naive_oracle", "naive_oracle")
-    return _run_mode(key, cfg, R, "naive_oracle")
 
 
 # Default key schedule, recorded in bench JSON artifacts: PR-2 replaced the
@@ -637,34 +558,3 @@ def batch_keys(reps: int, seed0: int = 0,
         raise ValueError(f"unknown key schedule {schedule!r}")
     root = jax.random.PRNGKey(seed0)
     return jax.vmap(lambda r: jax.random.fold_in(root, r))(jnp.arange(reps))
-
-
-def run_batch(keys, cfg: ScenarioConfig, R: int, mode: str,
-              M_override: Optional[int] = None, shard: bool = False,
-              devices=None) -> Dict[str, np.ndarray]:
-    """Vmapped Monte-Carlo over a batch of PRNG keys.
-
-    Deprecated mode-string shim over :meth:`repro.core.engine.Engine.run`
-    (kept bit-for-bit equivalent by the golden tests).  Returns the legacy
-    dict of stacked arrays: T (B,), valid (B,), efficiency (B, N), r_n,
-    mu, a, rate, max_backoff, lost_frac (B, N), plus the shared horizon M
-    actually used.  All reps share one bucketed horizon; if any rep is
-    uncertified the horizon doubles and the batch re-runs.
-
-    ``valid`` marks reps whose completion time is *certified*; when the
-    horizon cap is hit under heavy churn, uncertified reps come back with
-    ``valid=False`` and MUST be dropped (and counted) by the caller —
-    ``benchmarks.common.certified`` does this — never averaged.
-
-    ``shard=True`` splits the key batch over ``devices`` (default: all
-    local devices) via ``shard_map`` on a 1-D 'data' mesh, padding the
-    batch up to a device-count multiple; results are identical to the
-    unsharded vmap because per-rep lanes never communicate.
-    """
-    from . import engine, policies
-
-    _warn_mode_shim("run_batch", mode)
-    res = engine.Engine(shard=shard, devices=devices).run(
-        cfg, policies.get(mode), keys, R, M_override=M_override
-    )
-    return res.as_dict()

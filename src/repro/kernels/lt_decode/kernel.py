@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: one LT peeling round (masked gather + subtract).
+
+Mirror image of ``kernels/lt_encode``: where encode accumulates
+``sum_j mask * A[idx[b, j]]``, decode *starts* from the received coded block
+and subtracts the already-recovered neighbours, then scales by the pivot
+coefficient:
+
+    out[s] = (coded[cpos[s]] - sum_j w[s, j] * src[idx[s, j]]) / pivot[s]
+
+Grid (S, col_tiles, d_max), j innermost.  j == 0 initializes the fp32
+accumulator with the coded tile (its index map is constant in j, so Pallas
+keeps the block resident across the inner iterations — one DMA per (s, c)),
+each j subtracts one neighbour tile, and the tile is written once scaled by
+``inv_pivot``.  Pure VPU + DMA (no MXU), memory bound by design — tiles are
+sized large (bm x 512) like lt_encode so DMA efficiency stays high.
+
+The round schedule (which sources are independent) comes from
+:func:`repro.core.fountain.plan_rounds`; one ``pallas_call`` executes one
+round, so the device-side critical path is the dependency depth of the
+peeling, not its O(R) step count.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cpos_ref, idx_ref, w_ref, invp_ref, coded_ref, src_ref, o_ref,
+            acc, *, d_max):
+    s = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = coded_ref[...].astype(jnp.float32)
+
+    acc[...] -= src_ref[...].astype(jnp.float32) * w_ref[s, j]
+
+    @pl.when(j == d_max - 1)
+    def _write():
+        o_ref[...] = (acc[...] * invp_ref[s]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bc", "interpret"))
+def lt_decode_round_pallas(
+    coded: jnp.ndarray,     # (n_rx * bm, n_cols) received coded blocks
+    src: jnp.ndarray,       # (R * bm, n_cols) partially recovered sources
+    cpos: jnp.ndarray,      # (S,) int32 coded-block position per source
+    idx: jnp.ndarray,       # (S, d_max) int32 neighbour source blocks
+    w: jnp.ndarray,         # (S, d_max) float32 neighbour coefficients (0 pad)
+    inv_pivot: jnp.ndarray,  # (S,) float32 1/pivot
+    *,
+    bm: int,
+    bc: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One peel round: returns the (S * bm, n_cols) newly recovered blocks."""
+    n_cols = coded.shape[1]
+    S, d_max = idx.shape
+    if coded.shape[0] % bm or src.shape[0] % bm or n_cols % bc:
+        raise ValueError(
+            f"coded {coded.shape} / src {src.shape} not divisible by "
+            f"(bm={bm}, bc={bc})"
+        )
+    grid = (S, n_cols // bc, d_max)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (bm, bc),
+                lambda s, c, j, cpos_ref, idx_ref, w_ref, invp_ref:
+                    (cpos_ref[s], c),
+            ),
+            pl.BlockSpec(
+                (bm, bc),
+                lambda s, c, j, cpos_ref, idx_ref, w_ref, invp_ref:
+                    (idx_ref[s, j], c),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (bm, bc),
+            lambda s, c, j, cpos_ref, idx_ref, w_ref, invp_ref: (s, c),
+        ),
+        scratch_shapes=[pltpu.VMEM((bm, bc), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, d_max=d_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S * bm, n_cols), coded.dtype),
+        interpret=interpret,
+        name="lt_decode",
+    )
+    return fn(cpos.astype(jnp.int32), idx.astype(jnp.int32),
+              w.astype(jnp.float32), inv_pivot.astype(jnp.float32),
+              coded, src)

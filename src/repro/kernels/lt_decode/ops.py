@@ -1,0 +1,97 @@
+"""Dispatch wrapper for the LT payload decode (+ jnp fallback).
+
+Mirrors ``kernels/lt_encode/ops.py``: ``lt_decode`` takes the received
+coded blocks and a peeling :class:`~repro.core.fountain.DecodePlan`,
+executes the direct (systematic) fills, then one
+:func:`~.kernel.lt_decode_round_pallas` call per
+:func:`~repro.core.fountain.plan_rounds` level — or the pure-jnp
+``ref.lt_decode_ref`` path when ``use_pallas=False`` (CPU/GPU, tests).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import fountain
+from .kernel import lt_decode_round_pallas
+from .ref import lt_decode_ref
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def lt_decode(
+    coded_rx: jnp.ndarray,
+    plan: fountain.DecodePlan,
+    *,
+    bm: int,
+    bc: int = 512,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Recover the source rows from received coded rows via peeling.
+
+    coded_rx: (n_rx * bm, n_cols) — the received coded blocks, in the order
+    of the ``received_ids`` the plan was built from.  Returns
+    (R * bm, n_cols).
+    """
+    if coded_rx.shape[0] % bm:
+        raise ValueError(
+            f"coded_rx rows {coded_rx.shape[0]} not divisible by bm={bm}")
+    if not use_pallas:
+        return lt_decode_ref(coded_rx, plan, bm=bm)
+    n_cols = coded_rx.shape[1]
+    cp = _pad_to(n_cols, bc)
+    coded_p = jnp.pad(coded_rx, ((0, 0), (0, cp - n_cols)))
+    src = jnp.zeros((plan.R * bm, cp), coded_rx.dtype)
+    if plan.direct_src.size:
+        # Degree-1 receipts are plain scaled copies — a gather, not a kernel.
+        n_rx = coded_p.shape[0] // bm
+        c3 = coded_p.reshape(n_rx, bm, cp)
+        dcoef = jnp.asarray(plan.direct_coef).astype(src.dtype)[:, None, None]
+        src = src.reshape(plan.R, bm, cp).at[
+            jnp.asarray(plan.direct_src)
+        ].set(c3[jnp.asarray(plan.direct_coded)] / dcoef).reshape(-1, cp)
+    for rnd in fountain.plan_rounds(plan):
+        vals = lt_decode_round_pallas(
+            coded_p, src,
+            jnp.asarray(rnd.coded), jnp.asarray(rnd.nbr_idx),
+            jnp.asarray(rnd.nbr_coef),
+            jnp.asarray(1.0 / rnd.pivot, dtype=jnp.float32),
+            bm=bm, bc=bc, interpret=interpret,
+        )
+        src = src.reshape(plan.R, bm, cp).at[jnp.asarray(rnd.src)].set(
+            vals.reshape(rnd.size, bm, cp)
+        ).reshape(-1, cp)
+    return src[:, :n_cols]
+
+
+def lt_decode_code(
+    coded_rx: jnp.ndarray,
+    code: fountain.LTCode,
+    received_ids: np.ndarray,
+    *,
+    bm: Optional[int] = None,
+    **kw,
+) -> jnp.ndarray:
+    """Plan-and-decode convenience: peel ``received_ids`` of ``code`` and
+    apply.  Raises when peeling stalls (caller falls back to
+    :func:`fountain.decode`'s dense solve)."""
+    plan = fountain.peel_decode_plan(code, received_ids)
+    if plan is None:
+        raise ValueError(
+            "peeling stalled on the received set; use fountain.decode for "
+            "the dense fallback"
+        )
+    if bm is None:
+        n_rx = len(np.asarray(received_ids))
+        if coded_rx.shape[0] % n_rx:
+            raise ValueError(
+                f"coded_rx rows {coded_rx.shape[0]} not divisible by "
+                f"n_rx={n_rx}")
+        bm = coded_rx.shape[0] // n_rx
+    return lt_decode(coded_rx, plan, bm=bm, **kw)

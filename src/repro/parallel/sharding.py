@@ -129,7 +129,7 @@ def data_mesh(devices=None) -> Mesh:
     """1-D 'data' mesh over the given devices (default: all local devices).
 
     Used by the Monte-Carlo engine's device-sharded batch runner
-    (``core.simulator.run_batch(shard=True)``) and available to any other
+    (``core.engine.Engine(shard=True)``) and available to any other
     embarrassingly-parallel batch fan-out."""
     devs = list(devices) if devices is not None else jax.local_devices()
     return Mesh(np.asarray(devs), ("data",))

@@ -1,12 +1,14 @@
 """Fast-lane smoke of the benchmark harness: ``benchmarks.run --smoke``.
 
-Runs the churn figure end-to-end at tiny scale (2 reps, R=200, N=20,
+Runs the churn + decode figures end-to-end at tiny scale (2 reps, R=200,
 sweep endpoints only) in a subprocess, pointing BENCH_OUT_DIR at a tmpdir
 so the committed full-scale artifacts are untouched, and checks the
-artifact schema: the key-schedule and policy meta markers, all three
-sweeps, *every registered policy* (so a policy that breaks under
-jit/vmap/shard fails this fast lane), and per-point invalid-rep counts
-(dropped, never averaged).
+artifact schema: the key-schedule / policy / decoder meta markers, all
+three churn sweeps, *every registered policy* — including the
+decoder-in-the-loop ``rateless_ccp`` / ``adaptive_rate_fb`` (so a policy
+that breaks under jit/vmap/shard fails this fast lane), the measured LT
+overhead stats, and per-point invalid-rep counts (dropped, never
+averaged).
 """
 
 import json
@@ -26,8 +28,8 @@ def test_run_smoke_fig_churn(tmp_path):
     env["BENCH_OUT_DIR"] = str(tmp_path)
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.run", "--smoke", "--shard",
-         "--only", "fig_churn"],
-        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=900,
+         "--only", "fig_churn,fig_decode"],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1800,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     csv = [l for l in proc.stdout.splitlines() if l.startswith("fig_churn,")]
@@ -35,9 +37,16 @@ def test_run_smoke_fig_churn(tmp_path):
 
     doc = json.loads((tmp_path / "fig_churn.json").read_text())
     assert doc["meta"]["key_schedule"] == "fold_in"
-    # the smoke lane sweeps every registered policy, recorded in the meta
+    # the smoke lane sweeps every registered policy, recorded in the meta —
+    # including the decoder-in-the-loop ones
     swept = doc["meta"]["policy"]
     assert set(swept) == set(policies.names())
+    assert {"rateless_ccp", "adaptive_rate_fb"} <= set(swept)
+    # meta.decoder marks the completion semantics per policy, so counter
+    # and in-loop delay trajectories are never compared silently
+    assert doc["meta"]["decoder"]["rateless_ccp"] == "in_loop"
+    assert doc["meta"]["decoder"]["adaptive_rate_fb"] == "in_loop"
+    assert doc["meta"]["decoder"]["ccp"] == "counter"
     rows = doc["data"]
     assert {r["sweep"] for r in rows} == {"iid", "burst", "cell"}
     for r in rows:
@@ -60,3 +69,13 @@ def test_run_smoke_fig_churn(tmp_path):
     # block baselines have no ARQ/coding slack: on the lossy burst endpoint
     # the uncoded task must be unfinishable (recorded, not averaged away)
     assert hi["uncoded_mean"]["mean"] == float("inf")
+
+    # fig_decode: the decode-honesty figure ran, with measured LT overhead
+    # and the offline anchors present per row
+    ddoc = json.loads((tmp_path / "fig_decode.json").read_text())
+    assert ddoc["meta"]["decoder"]["rateless_ccp"] == "in_loop"
+    for r in ddoc["data"]:
+        ov = r["rateless_ccp"]["overhead"]
+        assert ov["frac_mean"] >= 0.0, r
+        assert r["counter_gap"] > 0.0
+        assert "soliton_failure" in r and "offline" in r

@@ -1,0 +1,388 @@
+"""Decoder-in-the-loop tests.
+
+Pins the four contracts of the new ``repro.core.decode`` subsystem:
+
+  (a) the incremental scan-safe peeling decoder (absorb/peel fixpoint) is
+      *bit-identical* to the offline planner — same recovered set as the
+      peeling closure on every tested (code, loss pattern, arrival order),
+      including decode-failure (insufficient overhead) cases;
+  (b) ``decode_completion`` (binary search over the time-sorted arrival
+      prefix) equals the brute-force one-arrival-at-a-time replay;
+  (c) the ``lt_decode`` payload kernel (round-levelized masked gather +
+      subtract) matches its jnp reference and the offline
+      ``fountain.decode``;
+  (d) the engine integration: ``rateless_ccp`` keeps CCP's pacing
+      bit-for-bit while completing at measured decode success (overhead
+      within the robust-soliton bound from ``decode_failure_prob``),
+      ``adaptive_rate_fb`` stops sending on decode feedback and never loses
+      to fixed-K rateless CCP on the fig_churn regimes, and the block-policy
+      ``horizon_hint`` cuts the scan horizon without changing results.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decode, engine, fountain, policies, simulator
+from repro.kernels.lt_decode import lt_decode, lt_decode_code
+from repro.kernels.lt_encode import lt_encode_code
+
+ENG = engine.Engine()
+
+
+def _closure_ref(code, keep):
+    """Pure-python peeling closure (the fixpoint both decoders must hit)."""
+    known: set = set()
+    nbrs = [set(code.idx[b, code.mask[b]].tolist()) for b in keep]
+    changed = True
+    while changed:
+        changed = False
+        for s in nbrs:
+            rem = s - known
+            if len(rem) == 1:
+                known.add(rem.pop())
+                changed = True
+    return known
+
+
+# ---------------------------------------------------------------------------
+# (a) incremental absorb/peel == offline planner (property)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    R=st.integers(min_value=8, max_value=40),
+    k_frac=st.floats(min_value=0.5, max_value=1.5),
+    seed=st.integers(min_value=0, max_value=500),
+    data=st.data(),
+)
+def test_property_incremental_matches_offline_closure(R, k_frac, seed, data):
+    """Any loss pattern, absorbed in any order and any batch size, must land
+    on exactly the offline peeling closure: done iff peel_decode_plan
+    succeeds, recovered mask == the closure set even on a stall."""
+    K = max(4, int(R * k_frac))
+    code = decode.make_decoder_code(R, K, seed=seed, d_max=8)
+    tables = decode.make_tables(code)
+    n_lost = data.draw(st.integers(min_value=0,
+                                   max_value=max(1, (R + K) // 3)))
+    rng = np.random.default_rng(seed + 1)
+    lost = rng.choice(R + K, size=n_lost, replace=False)
+    keep = np.setdiff1d(np.arange(R + K), lost)
+    order = rng.permutation(keep)
+    state = decode.init_state(R, tables)
+    chunk = data.draw(st.integers(min_value=1, max_value=5))
+    for c0 in range(0, len(order), chunk):
+        ids = jnp.asarray(order[c0:c0 + chunk])
+        state = decode.absorb(state, tables, ids,
+                              jnp.ones(ids.shape[0], bool))
+    plan = fountain.peel_decode_plan(code, keep)
+    assert bool(state["done"]) == (plan is not None)
+    closure = _closure_ref(code, keep)
+    assert set(np.flatnonzero(np.asarray(state["recovered"]))) == closure
+    assert int(state["count"]) == len(closure)
+
+
+def test_absorb_ignores_unreceived_and_duplicates():
+    R, K = 12, 16
+    code = decode.make_decoder_code(R, K, seed=3, d_max=8)
+    tables = decode.make_tables(code)
+    state = decode.init_state(R, tables)
+    ids = jnp.arange(8)
+    # received=False lanes are non-events
+    state = decode.absorb(state, tables, ids, jnp.zeros(8, bool))
+    assert int(state["count"]) == 0 and not bool(state["rx"].any())
+    # duplicates are idempotent
+    state = decode.absorb(state, tables, ids, jnp.ones(8, bool))
+    twice = decode.absorb(state, tables, ids, jnp.ones(8, bool))
+    np.testing.assert_array_equal(np.asarray(state["recovered"]),
+                                  np.asarray(twice["recovered"]))
+    np.testing.assert_array_equal(np.asarray(state["res_deg"]),
+                                  np.asarray(twice["res_deg"]))
+    assert int(twice["ripple"]) == 0
+
+
+def test_decode_failure_insufficient_overhead():
+    """Losing a source covered by no received parity must stall, not lie."""
+    code = fountain.make_lt_code(R=8, K=0, seed=0)
+    tables = {"idx": jnp.zeros((1, 1), jnp.int32),
+              "mask": jnp.zeros((1, 1), bool)}
+    state = decode.init_state(8, tables)
+    keep = np.setdiff1d(np.arange(8), [3])
+    state = decode.absorb(state, tables, jnp.asarray(keep),
+                          jnp.ones(keep.size, bool))
+    assert not bool(state["done"]) and int(state["count"]) == 7
+    assert fountain.peel_decode_plan(code, keep) is None
+
+
+# ---------------------------------------------------------------------------
+# (b) decode_completion == brute-force time-ordered replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss,seed", [(0.15, 0), (0.3, 1), (0.9, 2)])
+def test_decode_completion_matches_bruteforce_replay(loss, seed):
+    R, N, M = 16, 4, 20
+    code = decode.make_decoder_code(R)          # pool P=64, N*M=80=R+P slots
+    tables = decode.make_tables(code)
+    rng = np.random.default_rng(seed)
+    tr = rng.uniform(1.0, 100.0, (N, M))
+    tr[rng.random((N, M)) < loss] = np.inf
+    t, valid, k_star = decode.decode_completion(jnp.asarray(tr), tables, R)
+    # brute force: absorb one arrival at a time in time order
+    ids = (np.arange(M)[None, :] * N + np.arange(N)[:, None]).reshape(-1)
+    flat = tr.reshape(-1)
+    order = np.argsort(flat)
+    state = decode.init_state(R, tables)
+    bf_k, bf_t = None, np.inf
+    for j, o in enumerate(order):
+        if not np.isfinite(flat[o]):
+            break
+        state = decode.absorb(state, tables, jnp.asarray([ids[o]]),
+                              jnp.asarray([True]))
+        if bool(state["done"]):
+            bf_k, bf_t = j + 1, flat[o]
+            break
+    if bf_k is None:
+        assert not bool(valid) and not np.isfinite(float(t))
+    else:
+        assert int(k_star) == bf_k
+        np.testing.assert_allclose(float(t), bf_t, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (c) lt_decode payload kernel == jnp reference == offline fountain.decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,K,bm,cols,bc,n_lost", [
+    (12, 10, 4, 24, 8, 3),
+    (20, 24, 8, 16, 16, 6),
+    (8, 8, 16, 40, 8, 2),      # cols not divisible by bc -> padded path
+])
+def test_lt_decode_kernel_vs_ref_vs_offline(R, K, bm, cols, bc, n_lost):
+    code = decode.make_decoder_code(R, K, seed=R + K, d_max=8)
+    x = jax.random.normal(jax.random.PRNGKey(R), (R * bm, cols))
+    coded = lt_encode_code(x, code, bm=bm)
+    rng = np.random.default_rng(n_lost)
+    lost = rng.choice(R, size=n_lost, replace=False)  # lose systematic rows
+    keep = np.setdiff1d(np.arange(R + K), lost)
+    plan = fountain.peel_decode_plan(code, keep)
+    assert plan is not None, "pool code must peel these small loss patterns"
+    crx = coded.reshape(R + K, bm, cols)[keep].reshape(-1, cols)
+    ref = lt_decode(crx, plan, bm=bm)
+    ker = lt_decode(crx, plan, bm=bm, use_pallas=True, interpret=True, bc=bc)
+    off, method = fountain.decode(
+        crx.reshape(len(keep), bm, cols), code, keep)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(x),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    assert method == "peel"
+    np.testing.assert_allclose(np.asarray(off).reshape(-1, cols),
+                               np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_plan_rounds_levelization_is_consistent():
+    """Every peeled source appears in exactly one round and only depends on
+    direct sources or earlier rounds."""
+    code = decode.make_decoder_code(24, 30, seed=9, d_max=8)
+    keep = np.setdiff1d(np.arange(54), [1, 5, 8, 13, 21])
+    plan = fountain.peel_decode_plan(code, keep)
+    assert plan is not None
+    rounds = fountain.plan_rounds(plan)
+    seen = set(plan.direct_src.tolist())
+    all_round_src = []
+    for rnd in rounds:
+        for t in range(rnd.size):
+            nbrs = rnd.nbr_idx[t][rnd.nbr_coef[t] != 0]
+            assert set(nbrs.tolist()) <= seen, "forward dependency"
+        seen |= set(rnd.src.tolist())
+        all_round_src.extend(rnd.src.tolist())
+    assert sorted(all_round_src) == sorted(plan.order_src.tolist())
+
+
+def test_lt_decode_code_raises_on_stall():
+    code = fountain.make_lt_code(R=8, K=0, seed=0)
+    crx = jnp.zeros((7 * 2, 4))
+    keep = np.setdiff1d(np.arange(8), [3])
+    with pytest.raises(ValueError, match="stalled"):
+        lt_decode_code(crx, code, keep, bm=2)
+
+
+# ---------------------------------------------------------------------------
+# (d) engine integration
+# ---------------------------------------------------------------------------
+
+def test_rateless_pacing_equals_ccp_and_reports_decode_state():
+    """rateless_ccp is Algorithm 1 bit-for-bit on the wire (same tx/tr
+    traces) — only the completion rule changes — and surfaces the in-scan
+    decoder state through RunResult extras."""
+    cfg = simulator.ScenarioConfig(N=10, scenario=1)
+    R, M = 200, 256
+    key = jax.random.PRNGKey(0)
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = simulator.draw_helpers(k_h, cfg)
+    beta, d_up, d_ack, d_down = simulator.draw_packet_tables(
+        k_p, cfg, mu, a, rate, M, R)
+    c = cfg.ccp_cfg(R)
+    cfg_static = (c.Bx, c.Br, c.Back, c.alpha)
+    outs = {}
+    for mode in ("ccp", "rateless_ccp"):
+        pol = policies.get(mode)
+        aux = pol.prepare(cfg, R, c, mu, a, rate)
+        outs[mode], _ = engine.policy_stream(
+            beta, d_up, d_ack, d_down, policy=pol, cfg_static=cfg_static,
+            aux=aux)
+    for k in ("tx", "tr", "arrive", "idle"):
+        np.testing.assert_array_equal(np.asarray(outs["ccp"][k]),
+                                      np.asarray(outs["rateless_ccp"][k]), k)
+    res = ENG.run(cfg, "rateless_ccp", simulator.batch_keys(2), R)
+    assert bool(res.valid.all())
+    assert (res.extras["dec_count"] == R).all()
+    assert res.extras["dec_done"].all()
+    # measured LT overhead: arrivals the decode consumed beyond R
+    overhead = res.r_n.sum(axis=1) - R
+    assert (overhead >= 0).all()
+
+
+def test_rateless_overhead_within_robust_soliton_bound():
+    """The acceptance anchor: the measured mean LT overhead must sit inside
+    what the robust-soliton failure statistics say the code *needs* — the
+    smallest K whose offline decode_failure_prob stall rate drops below 1/2
+    at the matching loss level — and track the offline arrival-order
+    Monte-Carlo of the same pool code."""
+    R, p = 400, 0.1
+    cfg = simulator.ScenarioConfig(
+        N=20, scenario=1, mu_choices=(2.0,),
+        churn=simulator.ChurnConfig(drop_prob=p, max_backoff=8.0))
+    res = ENG.run(cfg, "rateless_ccp", simulator.batch_keys(6), R)
+    assert bool(res.valid.all())
+    overhead = res.r_n.sum(axis=1) - R
+    assert (overhead >= 0).all()
+    mean_ov = float(overhead.mean())
+    # robust-soliton bound from decode_failure_prob: the K the generic code
+    # needs before peeling survives this loss rate half the time
+    k_bound = None
+    for K in (R // 8, R // 4, R // 2, R):
+        n_lost = int(np.ceil(p * (R + K)))
+        stats = fountain.decode_failure_prob(R, K, n_lost, trials=12, seed=0)
+        if stats["peel_stall"] <= 0.5:
+            k_bound = K
+            break
+    assert k_bound is not None
+    assert mean_ov <= k_bound, (mean_ov, k_bound)
+    # and the in-engine measurement tracks the offline arrival-order MC of
+    # the very same pool code
+    offline = decode.offline_overhead_samples(
+        R, decode.make_decoder_code(R), p, trials=8, seed=3)
+    ok = offline[offline >= 0]
+    assert ok.size > 0
+    assert mean_ov / R <= (ok.mean() / R) * 1.5 + 0.05, (mean_ov, ok.mean())
+
+
+def test_adaptive_fb_stops_sending_after_decode_time():
+    """Once decode_done fires and the send clock passes decode_t_done, the
+    stream stops for good (tx trace goes +inf) — the realized overhead
+    sheds to what the decode needed."""
+    R = 200
+    cfg = simulator.ScenarioConfig(
+        N=10, scenario=1,
+        churn=simulator.ChurnConfig(drop_prob=0.1, max_backoff=8.0))
+    key = jax.random.PRNGKey(1)
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = simulator.draw_helpers(k_h, cfg)
+    M = 4 * (R + cfg.K(R))
+    beta, d_up, d_ack, d_down = simulator.draw_packet_tables(
+        k_p, cfg, mu, a, rate, M, R)
+    dyn = simulator.draw_dynamics(jax.random.fold_in(key, 0xC0DE), cfg, M)
+    c = cfg.ccp_cfg(R)
+    pol = policies.get("adaptive_rate_fb")
+    aux = pol.prepare(cfg, R, c, mu, a, rate)
+    outs, psum = engine.policy_stream(
+        beta, d_up, d_ack, d_down, policy=pol,
+        cfg_static=(c.Bx, c.Br, c.Back, c.alpha),
+        churn_static=cfg.churn.static_key(), dyn=dyn, a=a, aux=aux)
+    tx = np.asarray(outs["tx"])
+    assert np.isinf(tx).any(), "stream must stop after decode success"
+    # stopping is permanent per helper
+    for n in range(tx.shape[0]):
+        stopped = np.isinf(tx[n])
+        if stopped.any():
+            assert stopped[stopped.argmax():].all()
+    # and the unsent slots are non-events in the trace
+    assert not np.asarray(outs["lost"])[np.isinf(tx)].any()
+    assert (np.asarray(outs["idle"])[np.isinf(tx)] == 0).all()
+
+
+def test_adaptive_fb_not_worse_than_fixed_k_rateless_on_churn_regimes():
+    """The like-for-like acceptance comparison (both policies complete at
+    measured decode success): closing the loop — adapted send overhead +
+    stop-on-decode — must not lose to fixed-K rateless CCP on any fig_churn
+    regime endpoint."""
+    from benchmarks import fig_churn
+
+    keys = simulator.batch_keys(8)
+    R, n = 200, 20
+    for name, (axis, mk_cfg, _ax) in fig_churn.SWEEPS.items():
+        cfg = mk_cfg(axis[-1], n)
+        rl = ENG.run(cfg, "rateless_ccp", keys, R)
+        fb = ENG.run(cfg, "adaptive_rate_fb", keys, R)
+        both = rl.valid & fb.valid
+        assert both.sum() >= 4, (name, rl.valid, fb.valid)
+        ratio = float(fb.T[both].mean() / rl.T[both].mean())
+        assert ratio <= 1.02, (name, ratio)
+
+
+# ---------------------------------------------------------------------------
+# horizon_hint: block policies run a ~R/N-packet scan, results unchanged
+# ---------------------------------------------------------------------------
+
+def test_horizon_hint_cuts_engine_M_for_block_policies():
+    cfg = simulator.ScenarioConfig(N=10, scenario=1, mu_choices=(2.0,))
+    R = 320
+    keys = simulator.batch_keys(3)
+    default_m = simulator._horizon_shared(cfg, R)
+    for pol in ("uncoded_mean", "hcmm"):
+        res = ENG.run(cfg, pol, keys, R)
+        assert res.M < default_m, (pol, res.M, default_m)
+        assert bool(res.valid.all())
+        # the allocation is horizon-independent: identical at the old M
+        big = ENG.run(cfg, pol, keys, R, M_override=default_m)
+        np.testing.assert_array_equal(res.extras["loads"],
+                                      big.extras["loads"])
+        assert bool(big.valid.all())
+    # CCP keeps the engine default — no hint
+    assert policies.get("ccp").horizon_hint(cfg, R, R + cfg.K(R)) is None
+
+
+def test_block_policy_results_pinned_equal_at_both_horizons():
+    """The property that justifies the hint, pinned bit-for-bit: a block
+    policy's stream is causal in the packet index and reads only the first
+    ``loads_n`` packets, so truncating the *same* packet tables to the
+    hinted horizon changes nothing — neither the trace prefix nor T."""
+    cfg = simulator.ScenarioConfig(N=10, scenario=1, mu_choices=(2.0,))
+    R, M_big = 320, 512
+    kk = R + cfg.K(R)
+    pol = policies.get("uncoded_mean")
+    h = pol.horizon_hint(cfg, R, kk)
+    assert h is not None and h < M_big
+    key = jax.random.PRNGKey(2)
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = simulator.draw_helpers(k_h, cfg)
+    beta, d_up, d_ack, d_down = simulator.draw_packet_tables(
+        k_p, cfg, mu, a, rate, M_big, R)
+    c = cfg.ccp_cfg(R)
+    aux = pol.prepare(cfg, R, c, mu, a, rate)
+    assert int(jnp.max(aux["loads"])) <= h
+    cfg_static = (c.Bx, c.Br, c.Back, c.alpha)
+    big, _ = engine.policy_stream(beta, d_up, d_ack, d_down, policy=pol,
+                                  cfg_static=cfg_static, aux=aux)
+    small, _ = engine.policy_stream(
+        beta[:, :h], d_up[:, :h], d_ack[:, :h], d_down[:, :h], policy=pol,
+        cfg_static=cfg_static, aux=aux)
+    np.testing.assert_array_equal(np.asarray(big["tr"][:, :h]),
+                                  np.asarray(small["tr"]))
+    t_big, v_big = pol.finalize(big, aux, cfg, R, kk, None)
+    t_small, v_small = pol.finalize(small, aux, cfg, R, kk, None)
+    assert bool(v_big) and bool(v_small)
+    np.testing.assert_array_equal(np.float32(t_big), np.float32(t_small))

@@ -5,7 +5,18 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import baselines, simulator, theory
+from repro.core import baselines, engine, simulator, theory
+
+ENG = engine.Engine()
+
+
+def _run(mode):
+    return lambda key, cfg, R: ENG.run_one(key, cfg, mode, R)
+
+
+run_ccp = _run("ccp")
+run_best = _run("best")
+run_naive = _run("naive")
 
 
 @pytest.fixture(scope="module")
@@ -23,7 +34,7 @@ def _mean_over_reps(fn, cfg, R, reps=4, seed0=0):
 
 
 def test_timeline_monotone_and_fifo(sc1):
-    out = simulator.run_ccp(jax.random.PRNGKey(0), sc1, R=500)
+    out = run_ccp(jax.random.PRNGKey(0), sc1, R=500)
     # completion certified
     assert out["T"] > 0
     # r_n splits the work: counts sum to >= R+K
@@ -32,9 +43,9 @@ def test_timeline_monotone_and_fifo(sc1):
 
 def test_ccp_close_to_best_and_theory_sc1(sc1):
     R = 1000
-    t_ccp = _mean_over_reps(simulator.run_ccp, sc1, R)
-    t_best = _mean_over_reps(simulator.run_best, sc1, R)
-    o = simulator.run_ccp(jax.random.PRNGKey(0), sc1, R)
+    t_ccp = _mean_over_reps(run_ccp, sc1, R)
+    t_best = _mean_over_reps(run_best, sc1, R)
+    o = run_ccp(jax.random.PRNGKey(0), sc1, R)
     t_opt = theory.t_opt_model1(R, sc1.K(R), o["a"], o["mu"])
     # paper: CCP within a few percent of Best and Optimum-Analysis
     assert t_ccp <= t_best * 1.10
@@ -43,7 +54,7 @@ def test_ccp_close_to_best_and_theory_sc1(sc1):
 
 def test_ccp_beats_baselines_sc1(sc1):
     R = 1000
-    t_ccp = _mean_over_reps(simulator.run_ccp, sc1, R)
+    t_ccp = _mean_over_reps(run_ccp, sc1, R)
     t_unc = _mean_over_reps(
         lambda k, c, R: baselines.run_uncoded(k, c, R, rule="mean"), sc1, R
     )
@@ -54,7 +65,7 @@ def test_ccp_beats_baselines_sc1(sc1):
 
 def test_ccp_beats_baselines_sc2_with_big_margin(sc2):
     R = 1000
-    t_ccp = _mean_over_reps(simulator.run_ccp, sc2, R)
+    t_ccp = _mean_over_reps(run_ccp, sc2, R)
     t_unc = _mean_over_reps(
         lambda k, c, R: baselines.run_uncoded(k, c, R, rule="mean"), sc2, R
     )
@@ -67,7 +78,7 @@ def test_ccp_beats_baselines_sc2_with_big_margin(sc2):
 
 
 def test_efficiency_exceeds_99pct(sc1):
-    out = simulator.run_ccp(jax.random.PRNGKey(3), sc1, R=2000)
+    out = run_ccp(jax.random.PRNGKey(3), sc1, R=2000)
     eff = np.nanmean(out["efficiency"])
     assert eff > 0.99, f"paper: ~99.7% efficiency, got {eff}"
 
@@ -75,7 +86,7 @@ def test_efficiency_exceeds_99pct(sc1):
 def test_efficiency_close_to_theory(sc1):
     """Simulated efficiency should exceed the analytical average (12), which
     the paper notes is a (slightly loose) lower bound."""
-    out = simulator.run_ccp(jax.random.PRNGKey(4), sc1, R=2000)
+    out = run_ccp(jax.random.PRNGKey(4), sc1, R=2000)
     # RTT^data per helper = Bx/C_up + Br/C_down ~ (Bx+Br)/rate
     rtt = (8.0 * 2000 + 8.0) / out["rate"]
     gamma = theory.efficiency(rtt, out["a"], out["mu"])
@@ -90,9 +101,9 @@ def test_naive_gap_grows_with_R_on_slow_links():
     )
     gaps_naive, gaps_best = [], []
     for R in (200, 800):
-        t_ccp = _mean_over_reps(simulator.run_ccp, cfg, R, reps=3)
-        t_naive = _mean_over_reps(simulator.run_naive, cfg, R, reps=3)
-        t_best = _mean_over_reps(simulator.run_best, cfg, R, reps=3)
+        t_ccp = _mean_over_reps(run_ccp, cfg, R, reps=3)
+        t_naive = _mean_over_reps(run_naive, cfg, R, reps=3)
+        t_best = _mean_over_reps(run_best, cfg, R, reps=3)
         gaps_naive.append(t_naive - t_ccp)
         gaps_best.append(t_ccp - t_best)
     assert gaps_naive[1] > gaps_naive[0], "naive gap must grow with R"
@@ -102,9 +113,9 @@ def test_naive_gap_grows_with_R_on_slow_links():
 def test_scenario2_t_opt_realized_close():
     cfg = simulator.ScenarioConfig(N=50, scenario=2)
     R = 1000
-    t_ccp = _mean_over_reps(simulator.run_ccp, cfg, R, reps=4)
+    t_ccp = _mean_over_reps(run_ccp, cfg, R, reps=4)
     ub = None
-    o = simulator.run_ccp(jax.random.PRNGKey(0), cfg, R)
+    o = run_ccp(jax.random.PRNGKey(0), cfg, R)
     ub = theory.t_opt_model2_upper(R, cfg.K(R), o["a"], o["mu"])
     assert t_ccp < ub * 1.15  # Thm 3: E[T_opt] <= ub; CCP tracks T_opt
 
@@ -121,7 +132,7 @@ def test_completion_time_certification():
 def test_allocation_tracks_heterogeneity(sc1):
     """CCP's realized per-helper packet counts follow eq. (23): r_n
     proportional to 1/E[beta_n]."""
-    out = simulator.run_ccp(jax.random.PRNGKey(5), sc1, R=4000)
+    out = run_ccp(jax.random.PRNGKey(5), sc1, R=4000)
     e_beta = out["a"] + 1.0 / out["mu"]
     pred = theory.optimal_allocation(4000, sc1.K(4000), e_beta)
     corr = np.corrcoef(pred, out["r_n"])[0, 1]

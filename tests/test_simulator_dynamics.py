@@ -1,7 +1,7 @@
 """Dynamics engine tests: the vmapped batch runner and the churn model.
 
 Covers the three contract points of the batched Monte-Carlo engine:
-  (a) run_batch over vmapped keys == per-key sequential _run_mode,
+  (a) Engine.run over vmapped keys == per-key sequential Engine.run_one,
   (b) a helper that dies mid-task gets exponentially backed-off TTI
       (Alg. 1 line 13) and the task completes from the survivors,
   (c) a zero-churn ChurnConfig reproduces the static paper model
@@ -14,11 +14,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import simulator
+from repro.core import engine, policies, simulator
 
+ENG = engine.Engine()
 
 CFG = simulator.ScenarioConfig(N=20, scenario=1)
 R = 400
+
+
+def _stream(beta, d_up, d_ack, d_down, mode, cfg_static, **kw):
+    """policy_stream under a registry name; returns the trace dict."""
+    outs, _ = engine.policy_stream(
+        beta, d_up, d_ack, d_down, policy=policies.get(mode),
+        cfg_static=cfg_static, **kw)
+    return outs
 
 
 # ---------------------------------------------------------------------------
@@ -26,13 +35,12 @@ R = 400
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("mode", ["ccp", "best", "naive"])
-def test_run_batch_matches_sequential(mode):
+def test_engine_batch_matches_sequential(mode):
     reps = 4
     keys = simulator.batch_keys(reps)
-    batch = simulator.run_batch(keys, CFG, R, mode)
+    batch = ENG.run(CFG, mode, keys, R)
     for r in range(reps):
-        seq = simulator._run_mode(keys[r], CFG, R, mode,
-                                  M_override=batch["M"])
+        seq = ENG.run_one(keys[r], CFG, mode, R, M_override=batch.M)
         np.testing.assert_allclose(batch["T"][r], seq["T"], rtol=1e-6)
         np.testing.assert_array_equal(batch["r_n"][r], seq["r_n"])
         np.testing.assert_allclose(
@@ -40,17 +48,16 @@ def test_run_batch_matches_sequential(mode):
         )
 
 
-def test_run_batch_matches_sequential_under_churn():
+def test_engine_batch_matches_sequential_under_churn():
     cfg = simulator.ScenarioConfig(
         N=20, scenario=1,
         churn=simulator.ChurnConfig(period=5.0, p_down=0.1, p_slow=0.2,
                                     drop_prob=0.05),
     )
     keys = simulator.batch_keys(3)
-    batch = simulator.run_batch(keys, cfg, R, "ccp")
+    batch = ENG.run(cfg, "ccp", keys, R)
     for r in range(3):
-        seq = simulator._run_mode(keys[r], cfg, R, "ccp",
-                                  M_override=batch["M"])
+        seq = ENG.run_one(keys[r], cfg, "ccp", R, M_override=batch.M)
         np.testing.assert_allclose(batch["T"][r], seq["T"], rtol=1e-6)
         np.testing.assert_array_equal(batch["r_n"][r], seq["r_n"])
 
@@ -105,8 +112,8 @@ def test_dead_helper_backs_off_and_task_completes():
         speed=jnp.ones((N, n_phases)),
     )
     a = jnp.full((N,), 0.5)
-    outs = simulator.simulate_stream(
-        beta, d_up, d_ack, d_down, mode="ccp",
+    outs = _stream(
+        beta, d_up, d_ack, d_down, "ccp",
         cfg_static=(8.0 * R, 8.0, 1.0, 0.25),
         churn_static=(period, cap), dyn=dyn, a=a,
     )
@@ -150,8 +157,8 @@ def test_rejoining_helper_backoff_resets():
     up = jnp.ones((N, n_phases), bool).at[0, 1:3].set(False)
     dyn = dict(drop=jnp.zeros((N, M), bool), up=up,
                speed=jnp.ones((N, n_phases)))
-    outs = simulator.simulate_stream(
-        beta, d_up, d_ack, d_down, mode="ccp",
+    outs = _stream(
+        beta, d_up, d_ack, d_down, "ccp",
         cfg_static=(8.0 * R, 8.0, 1.0, 0.25),
         churn_static=(period, cap), dyn=dyn, a=jnp.full((N,), 0.25),
     )
@@ -175,8 +182,8 @@ def test_slowdown_phases_increase_completion_time():
         churn=simulator.ChurnConfig(period=5.0, p_slow=0.8, slowdown=4.0),
     )
     keys = simulator.batch_keys(4)
-    t_base = simulator.run_batch(keys, base, R, "ccp")["T"].mean()
-    t_slow = simulator.run_batch(keys, slowed, R, "ccp")["T"].mean()
+    t_base = ENG.run(base, "ccp", keys, R)["T"].mean()
+    t_slow = ENG.run(slowed, "ccp", keys, R)["T"].mean()
     assert t_slow > 1.5 * t_base
 
 
@@ -191,9 +198,9 @@ def test_ccp_degrades_gracefully_vs_naive():
                                     drop_prob=0.2, max_backoff=8.0),
     )
     keys = simulator.batch_keys(6)
-    t_ccp = simulator.run_batch(keys, cfg, 300, "ccp")["T"].mean()
-    t_best = simulator.run_batch(keys, cfg, 300, "best")["T"].mean()
-    t_naive = simulator.run_batch(keys, cfg, 300, "naive")["T"].mean()
+    t_ccp = ENG.run(cfg, "ccp", keys, 300)["T"].mean()
+    t_best = ENG.run(cfg, "best", keys, 300)["T"].mean()
+    t_naive = ENG.run(cfg, "naive", keys, 300)["T"].mean()
     assert t_ccp < t_naive, "CCP must beat Naive under churn"
     assert (t_ccp / t_best) < 0.6 * (t_naive / t_best), \
         "CCP's degradation vs Best must be far milder than Naive's"
@@ -220,8 +227,8 @@ def test_neutral_churn_is_bit_for_bit_static(mode, outage_dist):
     assert neutral.churn.neutral
     key = jax.random.PRNGKey(7)
     M = 128
-    s = simulator._run_mode(key, static, R, mode, M_override=M)
-    n = simulator._run_mode(key, neutral, R, mode, M_override=M)
+    s = ENG.run_one(key, static, mode, R, M_override=M)
+    n = ENG.run_one(key, neutral, mode, R, M_override=M)
     np.testing.assert_array_equal(np.float32(s["T"]), np.float32(n["T"]))
     np.testing.assert_array_equal(s["r_n"], n["r_n"])
     np.testing.assert_array_equal(s["efficiency"], n["efficiency"])
@@ -240,7 +247,7 @@ def test_ge_stationary_loss_rate():
     ch = simulator.ChurnConfig(ge_p_bad=0.05, ge_p_good=0.2,
                                ge_loss_bad=0.8, ge_loss_good=0.02)
     cfg = simulator.ScenarioConfig(N=100, scenario=1, churn=ch)
-    out = simulator.run_batch(simulator.batch_keys(3), cfg, 400, "ccp")
+    out = ENG.run(cfg, "ccp", simulator.batch_keys(3), 400)
     measured = float(out["lost_frac"].mean())
     expected = ch.ge_loss_rate
     assert abs(measured - expected) < 0.15 * expected, (measured, expected)
@@ -253,7 +260,7 @@ def test_ge_losses_are_bursty():
     ch = simulator.ChurnConfig(ge_p_bad=0.02, ge_p_good=0.1,
                                ge_loss_bad=1.0, ge_loss_good=0.0)
     cfg = simulator.ScenarioConfig(N=100, scenario=1, churn=ch)
-    # run_batch only reports per-helper lost_frac; run the stream directly
+    # the engine only reports per-helper lost_frac; run the stream directly
     # to get the raw (N, M) loss table for run-length statistics.
     k = jax.random.PRNGKey(0)
     k_h, k_p = jax.random.split(k)
@@ -261,8 +268,8 @@ def test_ge_losses_are_bursty():
     beta, d_up, d_ack, d_down = simulator.draw_packet_tables(
         k_p, cfg, mu, a, rate, 256, 400)
     dyn = simulator.draw_dynamics(jax.random.fold_in(k, 0xC0DE), cfg, 256)
-    outs = simulator.simulate_stream(
-        beta, d_up, d_ack, d_down, mode="best",
+    outs = _stream(
+        beta, d_up, d_ack, d_down, "best",
         cfg_static=(8.0 * 400, 8.0, 1.0, 0.25),
         churn_static=cfg.churn.static_key(), dyn=dyn, a=a,
     )
@@ -306,8 +313,8 @@ def test_cell_outage_takes_members_down_simultaneously():
         cell_end=jnp.asarray([4.0]),
         cell_mask=jnp.asarray([[True], [True], [False]]),
     )
-    outs = simulator.simulate_stream(
-        beta, d_up, d_ack, d_down, mode="best",
+    outs = _stream(
+        beta, d_up, d_ack, d_down, "best",
         cfg_static=(8.0 * R, 8.0, 1.0, 0.25),
         churn_static=(period, 8.0, "phase", False, True),
         dyn=dyn, a=jnp.full((N,), 0.1),
@@ -350,8 +357,8 @@ def test_duration_outages_last_longer_than_phase_outages():
     cfg_g = simulator.ScenarioConfig(
         N=30, scenario=1, churn=simulator.ChurnConfig(
             outage_dist="geometric", outage_mean=20.0, **base))
-    lost_p = simulator.run_batch(keys, cfg_p, 300, "ccp")["lost_frac"].mean()
-    lost_g = simulator.run_batch(keys, cfg_g, 300, "ccp")["lost_frac"].mean()
+    lost_p = ENG.run(cfg_p, "ccp", keys, 300)["lost_frac"].mean()
+    lost_g = ENG.run(cfg_g, "ccp", keys, 300)["lost_frac"].mean()
     assert lost_g > 1.5 * lost_p, (lost_p, lost_g)
 
 
@@ -370,7 +377,7 @@ def test_naive_oracle_timer_between_naive_and_best():
                                     drop_prob=0.2, max_backoff=8.0),
     )
     keys = simulator.batch_keys(6)
-    t = {m: simulator.run_batch(keys, cfg, 300, m)["T"].mean()
+    t = {m: ENG.run(cfg, m, keys, 300)["T"].mean()
          for m in ("best", "naive", "naive_oracle")}
     assert t["naive_oracle"] < t["naive"], t
     assert t["naive_oracle"] > t["best"], t
@@ -387,7 +394,7 @@ os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
 import json
 import jax
 import numpy as np
-from repro.core import simulator
+from repro.core import engine, simulator
 
 assert len(jax.local_devices()) == 8
 cfg = simulator.ScenarioConfig(
@@ -408,25 +415,28 @@ def eq(x, y):
 out = {}
 # 11 reps: not a device-count multiple, so the pad-and-slice path runs too.
 keys = simulator.batch_keys(11)
-for mode in ("ccp", "naive_oracle"):
-    a = simulator.run_batch(keys, cfg, 120, mode)
-    b = simulator.run_batch(keys, cfg, 120, mode, shard=True)
-    out[f"{mode}_bitwise_equal"] = bool(all(eq(a[k], b[k]) for k in a))
+for mode in ("ccp", "naive_oracle", "rateless_ccp"):
+    a = engine.Engine().run(cfg, mode, keys, 120)
+    b = engine.Engine(shard=True).run(cfg, mode, keys, 120)
+    out[f"{mode}_bitwise_equal"] = bool(
+        all(eq(a[k], b[k]) for k in a.keys()))
     out[f"{mode}_M"] = int(a["M"])
 # explicit device subset (3 of 8, another pad case)
-c = simulator.run_batch(keys, cfg, 120, "ccp", shard=True,
-                        devices=jax.local_devices()[:3])
-a = simulator.run_batch(keys, cfg, 120, "ccp")
-out["subset_bitwise_equal"] = bool(all(eq(a[k], c[k]) for k in a))
+c = engine.Engine(shard=True, devices=jax.local_devices()[:3]).run(
+    cfg, "ccp", keys, 120)
+a = engine.Engine().run(cfg, "ccp", keys, 120)
+out["subset_bitwise_equal"] = bool(all(eq(a[k], c[k]) for k in a.keys()))
 print("RESULT:" + json.dumps(out))
 """
 
 
 @pytest.mark.multidevice
-def test_sharded_run_batch_matches_vmap_bitwise():
-    """run_batch(shard=True) over 8 forced host devices returns results
-    bitwise identical to the unsharded vmap, including when the batch does
-    not divide the device count (padding) and on a device subset."""
+def test_sharded_engine_matches_vmap_bitwise():
+    """Engine(shard=True) over 8 forced host devices returns results
+    bitwise identical to the unsharded vmap — including the decoder-in-the-
+    loop rateless policy (its scan-carried DecoderState and binary-search
+    finalize must shard transparently), when the batch does not divide the
+    device count (padding), and on a device subset."""
     import os
     import subprocess
     import sys
@@ -445,4 +455,5 @@ def test_sharded_run_batch_matches_vmap_bitwise():
     out = json.loads(line[len("RESULT:"):])
     assert out["ccp_bitwise_equal"], out
     assert out["naive_oracle_bitwise_equal"], out
+    assert out["rateless_ccp_bitwise_equal"], out
     assert out["subset_bitwise_equal"], out

@@ -16,7 +16,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.ccp_paper import FIG3
-from repro.core import baselines, simulator, theory
+from repro.core import baselines, engine, simulator, theory
+
+run_ccp = lambda key, cfg, R: engine.Engine().run_one(key, cfg, "ccp", R)
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.optim import adamw
@@ -28,10 +30,10 @@ def test_paper_headline_end_to_end():
     reps = 5
     t = lambda fn: float(np.mean(
         [fn(jax.random.PRNGKey(i), cfg, R)["T"] for i in range(reps)]))
-    t_ccp = t(simulator.run_ccp)
+    t_ccp = t(run_ccp)
     t_unc = t(lambda k, c, r: baselines.run_uncoded(k, c, r, "mean"))
     t_hcmm = t(baselines.run_hcmm)
-    o = simulator.run_ccp(jax.random.PRNGKey(0), cfg, R)
+    o = run_ccp(jax.random.PRNGKey(0), cfg, R)
     t_opt = theory.t_opt_model1(R, cfg.K(R), o["a"], o["mu"])
     assert t_ccp < t_unc and t_ccp < t_hcmm
     assert t_ccp < t_opt * 1.25  # close to optimum analysis
