@@ -85,7 +85,8 @@ def policy_meta(names) -> Dict[str, int]:
 
 
 def emit(name: str, rows: List[dict], derived: str = "",
-         policies: Dict[str, int] | None = None) -> None:
+         policies: Dict[str, int] | None = None,
+         extra_meta: Dict[str, object] | None = None) -> None:
     """Write JSON artifact + the harness CSV line ``name,us_per_call,derived``.
 
     The artifact is ``{"meta": {...}, "data": rows}``: ``meta`` records the
@@ -95,7 +96,8 @@ def emit(name: str, rows: List[dict], derived: str = "",
     :func:`policy_meta`, plus ``meta.decoder``, marking per policy whether
     its completion rule actually *decodes* in the loop (``"in_loop"``) or
     counts packets (``"counter"``), so delay trajectories from the two
-    completion semantics are never compared silently."""
+    completion semantics are never compared silently.  ``extra_meta``
+    merges figure-specific keys (e.g. fig_fleet's ``discipline``)."""
     from repro.core import policies as policy_registry
     from repro.core import simulator
 
@@ -108,6 +110,8 @@ def emit(name: str, rows: List[dict], derived: str = "",
                 else "counter")
             for n in policies
         }
+    if extra_meta:
+        meta.update(extra_meta)
     doc = {"meta": meta, "data": rows}
     (OUT_DIR / f"{name}.json").write_text(json.dumps(doc, indent=1))
     print(f"{name},-,{derived}")

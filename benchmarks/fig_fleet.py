@@ -1,0 +1,65 @@
+"""Beyond-paper figure: fleet saturation — tenant sojourn vs offered load.
+
+The paper evaluates one master and a dedicated helper pool; a real edge
+deployment multiplexes *tenants* over one pool.  This sweep packs an
+increasing number of concurrent tasks onto a fixed pool (striped
+admission, ``helpers_per_task`` recruits each, wrapping into overlap once
+the pool is exhausted) and records, per policy:
+
+  * p50 / p99 certified sojourn (completion minus release) — the knee
+    where queueing delay takes off is the pool's saturation point;
+  * mean helper utilization inside the fleet makespan and the Jain
+    fairness of the tenants' sojourns;
+  * the uncertified-task count (dropped, never averaged).
+
+``offered`` is the recruit-weighted load ``n_tasks * helpers_per_task /
+N``: 1.0 is the point where the striped placement runs out of disjoint
+helpers and tenants start sharing.  CCP's interest here is that its TTI
+feedback *sees* queueing (a contended helper looks slow), so it should
+degrade past the knee more gracefully than the load-oblivious baselines
+— that ordering at the knee is pinned by tests/test_bench_smoke.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine, fleet, simulator
+
+from .common import emit, policy_meta
+
+N = 20
+R = 300
+TASK_SWEEP = (1, 2, 4, 8, 12)
+HELPERS_PER_TASK = 5
+POLICIES = ("ccp", "adaptive_rate", "hcmm", "naive")
+DISCIPLINE = "fifo"
+
+
+def run(reps: int = 40, task_sweep=TASK_SWEEP, R: int = R,
+        n_helpers: int = N, helpers_per_task: int = HELPERS_PER_TASK,
+        policies=POLICIES, discipline: str = DISCIPLINE,
+        shard: bool = False) -> dict:
+    del shard  # fleet reps are vmapped; device sharding is future work
+    eng = engine.Engine()
+    cfg = simulator.ScenarioConfig(N=n_helpers, scenario=1)
+    keys = simulator.batch_keys(reps)
+    h = min(helpers_per_task, n_helpers)
+    rows = []
+    knee = {}
+    for m in task_sweep:
+        fc = fleet.FleetConfig(n_tasks=m, discipline=discipline,
+                               placement="striped", helpers_per_task=h)
+        row = {"n_tasks": m, "offered": m * h / n_helpers, "R": R,
+               "N": n_helpers, "helpers_per_task": h}
+        for pol in policies:
+            res = eng.run_fleet(cfg, pol, keys, R, fleet=fc)
+            row[pol] = res.summary()
+            if row["offered"] >= 1.0 and pol not in knee:
+                knee[pol] = row[pol]["p50"]
+        rows.append(row)
+    derived = " ".join(
+        f"{pol}_knee_p50={knee[pol]:.3f}" for pol in policies if pol in knee)
+    emit("fig_fleet", rows, derived, policies=policy_meta(policies),
+         extra_meta={"discipline": discipline})
+    return {"rows": rows, "knee": knee}

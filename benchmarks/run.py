@@ -10,6 +10,9 @@ simulation benchmarks whose deliverable is the derived statistics).
                 (beyond-paper, §1 claim; includes naive+oracle-timer)
   fig_decode  — measured LT decode overhead + counter-vs-decoder honesty
                 gap across a loss sweep (beyond-paper, PR-4 decoder loop)
+  fig_fleet   — multi-tenant saturation sweep: p50/p99 sojourn, helper
+                utilization and Jain fairness vs offered load
+                (beyond-paper, PR-7 fleet engine)
   efficiency  — measured vs eq.(12) efficiency (paper §6 table)
   overhead    — fountain codec failure prob + O(R) timing (paper §2 claims)
   kernel      — Pallas hot-spot roofline accounting + batched-MC speedup
@@ -60,7 +63,7 @@ def main(argv=None) -> None:
     from repro.core import policies as policy_registry
 
     from . import (efficiency, fig3, fig4, fig5, fig_churn, fig_decode,
-                   kernel_bench, overhead, roofline_report)
+                   fig_fleet, kernel_bench, overhead, roofline_report)
 
     reps_explicit = args.reps is not None
     reps = args.reps if reps_explicit else (
@@ -86,6 +89,8 @@ def main(argv=None) -> None:
         )
         decode_kw = dict(sweep=(0.0, 0.2), R=200, n_helpers=16,
                          offline_trials=2)
+        fleet_kw = dict(task_sweep=(1, 4), R=120, n_helpers=10,
+                        helpers_per_task=3, policies=("ccp", "naive"))
     elif args.fast:
         sweep = (500, 1000)
         churn_kw = dict(
@@ -93,10 +98,13 @@ def main(argv=None) -> None:
                     for name, (axis, mk, ax_name) in fig_churn.SWEEPS.items()},
         )
         decode_kw = dict(sweep=(0.0, 0.2), offline_trials=4)
+        fleet_kw = dict(task_sweep=(1, 4, 8), R=200, n_helpers=12,
+                        helpers_per_task=4)
     else:
         sweep = (1000, 2000, 4000, 8000)
         churn_kw = {}
         decode_kw = {}
+        fleet_kw = {}
     small = args.fast or args.smoke
     # An explicit --reps is honored verbatim everywhere; the per-figure
     # scaling below only applies to the lane defaults.
@@ -115,6 +123,7 @@ def main(argv=None) -> None:
                                            **churn_policies, **churn_kw),
         "fig_decode": lambda: fig_decode.run(reps=reps, shard=shard,
                                              **decode_kw),
+        "fig_fleet": lambda: fig_fleet.run(reps=reps, **fleet_kw),
         "efficiency": lambda: efficiency.run(
             reps=eff_reps,
             R=400 if args.smoke else (2000 if args.fast else 8000),

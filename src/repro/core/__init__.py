@@ -8,5 +8,5 @@ registered :mod:`repro.core.policies` plugin (ccp / best / naive /
 naive_oracle / uncoded_* / hcmm / adaptive_rate) through one vmapped,
 optionally device-sharded Monte-Carlo path."""
 
-from . import (baselines, ccp, engine, fountain, policies, simulator,  # noqa: F401
-               theory)
+from . import (baselines, ccp, engine, fleet, fountain, policies,  # noqa: F401
+               simulator, theory)

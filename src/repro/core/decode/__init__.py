@@ -35,6 +35,7 @@ from .peeling import (  # noqa: F401
     offline_overhead_samples,
     peel,
     peel_round,
+    send_order_ids,
     slot_ids,
 )
 
@@ -52,5 +53,6 @@ __all__ = [
     "offline_overhead_samples",
     "peel",
     "peel_round",
+    "send_order_ids",
     "slot_ids",
 ]

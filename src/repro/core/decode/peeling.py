@@ -10,13 +10,22 @@ round-trips.
 Representation
 --------------
 The code is the systematic LT construction of :func:`fountain.make_lt_code`
-with a *parity pool* of ``P`` rows (`make_decoder_code`).  Global coded ids
-are assigned to send slots deterministically — helper ``n``'s packet ``i``
-carries id ``g = i*N + n`` (`slot_ids`) — so ids ``g < R`` are the source
-blocks themselves and ids ``g >= R`` map onto pool row ``(g - R) % P``
-(wrapping past the pool resends an earlier parity; the absorb is idempotent,
-so duplicates are harmless and simply useless, like a repeated fountain
-symbol).
+with a *parity pool* of ``P`` rows (`make_decoder_code`).  Ids ``g < R``
+are the source blocks themselves and ids ``g >= R`` map onto pool row
+``(g - R) % P`` (wrapping past the pool resends an earlier parity; the
+absorb is idempotent, so duplicates are harmless and simply useless, like a
+repeated fountain symbol).  Symbol ids follow the master's *send counter*:
+whichever helper sends next gets the next unissued id, so the ids on the
+wire are always a dense prefix of the pool's designed order and a straggler
+never strands a block of unsent ids.  The exact assignment is the rank of
+the send instant over the whole trace (:func:`send_order_ids`, used by
+``finalize_decode``); the in-scan decoder state uses the per-round
+approximation (``engine._send_time_ids``, recorded in ``outs["sym_id"]``)
+because a forward round-major scan cannot know how many future-round sends
+precede a straggler's current send in wall-clock time.  The legacy
+round-robin assignment — helper ``n``'s packet ``i`` carries ``g = i*N + n``
+(`slot_ids`) — remains the ``ids=None`` fallback of
+:func:`decode_completion`.
 
 ``DecoderState`` (a plain dict pytree, one per Monte-Carlo rep):
 
@@ -68,6 +77,7 @@ __all__ = [
     "init_state",
     "make_decoder_code",
     "make_tables",
+    "send_order_ids",
     "offline_overhead_samples",
     "peel",
     "peel_round",
@@ -271,6 +281,7 @@ def decode_completion(
     tables: DecoderTables,
     R: int,
     tx_end: Optional[jnp.ndarray] = None,
+    ids: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Exact decode-success completion time from the (N, M) arrival table.
 
@@ -283,13 +294,22 @@ def decode_completion(
     applies the same horizon certification as
     :func:`repro.core.simulator.completion_time` and is False when even the
     full horizon's arrivals cannot decode (caller re-runs with a larger M).
+
+    ``ids`` is the (N, M) global coded id each slot carried.  ``None``
+    reproduces the legacy round-robin assignment ``g = i*N + n``; the
+    engine now records the send-time assignment in ``outs["sym_id"]``
+    (fresh ids handed to whichever helper sends next), which closes the
+    counter-vs-decode gap a slow helper opens by sitting on an early
+    systematic id.
     """
     N, M = tr.shape
     P = tables["idx"].shape[0]
     nm = N * M
     deg = tables["mask"].sum(axis=1).astype(jnp.int32)
-    ids = (jnp.arange(M, dtype=jnp.int32)[None, :] * N
-           + jnp.arange(N, dtype=jnp.int32)[:, None])
+    if ids is None:
+        ids = (jnp.arange(M, dtype=jnp.int32)[None, :] * N
+               + jnp.arange(N, dtype=jnp.int32)[:, None])
+    ids = ids.astype(jnp.int32)
     flat_tr = tr.reshape(-1)
     order = jnp.argsort(flat_tr)
     st_tr = flat_tr[order]
@@ -325,12 +345,36 @@ def decode_completion(
     return t, valid, k_star
 
 
+def send_order_ids(tx) -> jnp.ndarray:
+    """Exact send-order symbol ids: the id the master's symbol counter
+    hands each (helper, round) send at its send instant — the rank of
+    ``tx`` over the whole trace.  Causal in real time (the count of
+    earlier sends is known at every send instant) even though no forward
+    round-major scan can compute it, which is why the *in-scan* decoder
+    state uses the per-round approximation (``engine._send_time_ids``)
+    and this exact assignment lives in finalize.
+
+    Ties rank round-major (round, then helper index), so a homogeneous
+    lockstep trace reproduces the legacy round-robin grid ``g = i*N + n``
+    bit for bit.  Unsent slots (tx = +inf) rank after every real send and
+    their ids are never absorbed (their ``tr`` is +inf too)."""
+    n, m = tx.shape
+    flat = jnp.where(jnp.isfinite(tx), tx, jnp.inf).T.ravel()  # round-major
+    order = jnp.argsort(flat, stable=True)
+    rank = jnp.argsort(order)
+    return rank.reshape(m, n).T.astype(jnp.int32)
+
+
 def finalize_decode(outs: dict, aux: dict, R: int, tx_end) -> Tuple:
     """The shared ``Policy.finalize`` body of the decoder-in-the-loop
     policies: time-exact decode-success completion from the stream trace
-    (k_star stays internal; the measured overhead is ``r_n.sum() - R``)."""
+    (k_star stays internal; the measured overhead is ``r_n.sum() - R``).
+    Symbol identities are the master's send counter
+    (:func:`send_order_ids` over the recorded ``tx`` trace); legacy
+    traces without a ``tx`` record fall back to the round-robin slots."""
+    ids = send_order_ids(outs["tx"]) if "tx" in outs else None
     t, valid, _k_star = decode_completion(
-        outs["tr"], aux["decoder"]["tables"], R, tx_end=tx_end)
+        outs["tr"], aux["decoder"]["tables"], R, tx_end=tx_end, ids=ids)
     return t, valid
 
 

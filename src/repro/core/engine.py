@@ -25,6 +25,13 @@ The PR-2 string-dispatch surface (``simulator.run_batch(mode=...)``,
 ``run_ccp/best/naive/naive_oracle``, ``simulate_stream(mode=...)``) was
 removed in PR 4; the golden tests in ``tests/test_policies.py`` still pin
 ``Engine.run`` bit-for-bit against its recorded outputs.
+
+PR 7 factored the scan step into shared kernels (``_churn_step`` /
+``_ge_step`` / ``_decode_step`` / ``_hook_step``) so the multi-tenant
+event-clock scan of :mod:`repro.core.fleet` runs the exact same per-stream
+ops with helper busy-time serialized across tenants;
+``Engine.run_fleet(cfg, policy, keys, R, fleet=FleetConfig(...))`` is the
+fleet entry point (see docs/fleet.md).
 """
 
 from __future__ import annotations
@@ -42,13 +49,147 @@ from . import decode as decode_mod
 from . import policies as policies_mod
 from . import simulator as sim
 
-__all__ = ["Engine", "RunResult", "policy_stream"]
+__all__ = ["Engine", "RunResult", "FleetRunResult", "policy_stream"]
 
 
 def _as_policy(policy) -> policies_mod.Policy:
     if isinstance(policy, str):
-        return policies_mod.get(policy)
+        return policies_mod.get(policy)  # unknown names raise with known list
+    if not isinstance(policy, policies_mod.Policy):
+        raise TypeError(
+            "policy must be a registry name or a Policy instance, got "
+            f"{type(policy).__name__}; known policies: "
+            f"{list(policies_mod.names())}"
+        )
     return policy
+
+
+def _check_inputs(keys, R):
+    """Actionable validation for the public runners: an empty key batch or
+    a non-positive R otherwise surfaces as an opaque scan/shape error deep
+    inside jit."""
+    if isinstance(R, bool) or not isinstance(R, (int, np.integer)) or R <= 0:
+        raise ValueError(
+            f"R must be a positive int (source packets per task), got {R!r}"
+        )
+    keys = jnp.asarray(keys)
+    if keys.ndim == 0 or keys.shape[0] == 0:
+        raise ValueError(
+            "keys must be a non-empty batch of PRNG keys — e.g. "
+            f"simulator.batch_keys(reps) — got shape {tuple(keys.shape)}"
+        )
+    typed = hasattr(jax.dtypes, "prng_key") and jnp.issubdtype(
+        keys.dtype, jax.dtypes.prng_key)
+    if not (typed and keys.ndim == 1) and not (
+            keys.ndim == 2 and keys.shape[-1] == 2):
+        raise ValueError(
+            "keys must be raw PRNG keys shaped (reps, 2) "
+            "(simulator.batch_keys) or a 1-D typed key array; got shape "
+            f"{tuple(keys.shape)} dtype {keys.dtype}"
+        )
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# Shared step kernels
+#
+# The per-step physics — churn evaluation, the Gilbert–Elliott chain, the
+# incremental decoder absorb, and the policy-hook round — are factored out
+# of ``policy_stream``'s step so the multi-tenant event-clock scan
+# (:mod:`repro.core.fleet.stream`) composes the *same traced ops* per
+# (task, helper) stream.  That is what makes the 1-task dedicated-pool
+# fleet bit-for-bit equal to the single-task path (tests/test_fleet.py).
+# ---------------------------------------------------------------------------
+
+def _parse_churn_static(churn_static):
+    """Unpack ``ChurnConfig.static_key()`` or the legacy 2-tuple (phase
+    outages only) used by direct ``policy_stream`` callers."""
+    ge_on = cell_on = False
+    outage_dist = "phase"
+    if len(churn_static) == 2:
+        period, max_backoff = churn_static
+    else:
+        period, max_backoff, outage_dist, ge_on, cell_on = churn_static
+    return period, max_backoff, outage_dist, ge_on, cell_on
+
+
+def _churn_step(dyn, a, beta_x, drop, t_arr, t_sta, sent, *, period, window,
+                outage_dist, cell_on):
+    """Outage / slowdown / iid-drop evaluation for one step's (N,) packets.
+
+    Outage if the helper is down when the packet arrives or when it would
+    start computing; degraded phases stretch the runtime (beta = a + eps/mu,
+    so (beta - a)/speed rescales the random part).  ``t_arr``/``t_sta``
+    must be pre-clamped for unsent slots so no inf reaches an index op.
+    """
+    if outage_dist == "phase":
+        is_up = (sim._phase_lookup(dyn["up"], t_arr, period)
+                 & sim._phase_lookup(dyn["up"], t_sta, period))
+    else:
+        is_up = ~(sim._interval_hit(dyn["out_start"], dyn["out_end"],
+                                    t_arr, window)
+                  | sim._interval_hit(dyn["out_start"], dyn["out_end"],
+                                      t_sta, window)).any(axis=1)
+    if cell_on:
+        in_cell = dyn["cell_mask"] & (
+            sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
+                              t_arr, window)
+            | sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
+                                t_sta, window)
+        )
+        is_up &= ~in_cell.any(axis=1)
+    sp = sim._phase_lookup(dyn["speed"], t_sta, period)
+    beta_i = jnp.where(sp == 1.0, beta_x, a + (beta_x - a) / sp)
+    lost = (drop | ~is_up) & sent
+    return beta_i, lost
+
+
+def _ge_step(bad, ge_params, u_trans, u_loss, sent):
+    """Gilbert–Elliott: loss by the current state, then the per-packet state
+    transition (the chain advances even for packets already lost to an
+    outage — the radio fades regardless).  ``u_loss``/``sent`` may carry a
+    leading tenant axis (fleet: one shared chain per helper, per-tenant
+    loss draws); ``bad``/``u_trans`` stay (N,)."""
+    p_bad, p_good, l_good, l_bad = ge_params
+    lost = (u_loss < jnp.where(bad, l_bad, l_good)) & sent
+    bad_next = jnp.where(bad, u_trans >= p_good, u_trans < p_bad)
+    return lost, bad_next
+
+
+def _send_time_ids(sym_next, tx, sent):
+    """Send-time coded-symbol assignment: rank this step's sends by their
+    send instant (ties -> helper index, i.e. the legacy round-robin order)
+    and hand out the next unissued global ids in that order, so a slow
+    helper never sits on an early systematic id while fast helpers burn
+    parities.  Unsent slots consume nothing; their placeholder ids are
+    never absorbed (received=False) and never finish (tr=inf), so they
+    cannot enter a decode prefix."""
+    order = jnp.argsort(jnp.where(sent, tx, jnp.inf))
+    rank = jnp.argsort(order).astype(jnp.int32)
+    return sym_next + rank, sym_next + sent.sum(dtype=jnp.int32)
+
+
+def _decode_step(dec, t_hi, t_done, tables, ids, received, tr_ok):
+    """Absorb this step's result arrivals into the peeling decoder and
+    maintain the real-time decode bound: every absorbed result has arrived
+    by ``t_hi``, so when ``done`` first fires the collector provably holds
+    a decodable set by then (StepCtx doc)."""
+    dec = decode_mod.absorb(dec, tables, ids, received)
+    t_hi = jnp.maximum(t_hi, jnp.where(received, tr_ok, 0.0).max())
+    t_done = jnp.where(dec["done"] & ~jnp.isfinite(t_done), t_hi, t_done)
+    return dec, t_hi, t_done
+
+
+def _hook_step(policy, pstate, ctx, churn: bool):
+    """One policy-hook round: receipt handling, pacing, and — under churn —
+    the loss reaction, applied as ``where(lost, tx_retx, tx_next)``."""
+    pstate = policy.on_computed(pstate, ctx)
+    tx_next = policy.next_load(pstate, ctx)
+    if churn:
+        pstate, tx_retx = policy.on_timeout(pstate, ctx, tx_next)
+        tx_next = jnp.where(ctx.lost, tx_retx, tx_next)
+    b = policy.backoff(pstate)
+    return pstate, tx_next, b if b is not None else jnp.ones(ctx.n)
 
 
 # ---------------------------------------------------------------------------
@@ -63,7 +204,9 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
     """Simulate M packets on every helper under ``policy``.
 
     Returns ``(outs, psummary)``: ``outs`` is the dict of (N, M) trace
-    arrays (tr, idle, tx, arrive, beta, lost, backoff) plus ``tx_end``
+    arrays (tr, idle, tx, arrive, beta, lost, backoff, and — for
+    decoder-in-the-loop policies — ``sym_id``, the global coded id each
+    send slot carried under the send-time assignment) plus ``tx_end``
     (N,) — the send time of the first unsimulated packet — and
     ``psummary`` is ``policy.summary(final_state)``.
 
@@ -85,10 +228,8 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
     outage_dist = "phase"
     max_backoff = None
     if churn:
-        if len(churn_static) == 2:  # legacy direct callers (phase model)
-            period, max_backoff = churn_static
-        else:
-            period, max_backoff, outage_dist, ge_on, cell_on = churn_static
+        (period, max_backoff, outage_dist, ge_on,
+         cell_on) = _parse_churn_static(churn_static)
         window = period * dyn["speed"].shape[1]
 
     use_dec = bool(policy.uses_decoder)
@@ -104,6 +245,7 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
         carry0["dec"] = aux["decoder"]["state0"]
         carry0["dec_t_hi"] = jnp.float32(0.0)   # max received tr so far
         carry0["dec_t_done"] = jnp.float32(jnp.inf)  # t_hi when done fired
+        carry0["sym_next"] = jnp.int32(0)       # next unissued coded id
     xs = dict(
         beta=beta.T, d_up=d_up.T, d_ack=d_ack.T, d_down=d_down.T,
         i=jnp.arange(M),
@@ -127,41 +269,20 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
         t_arr = jnp.where(sent, arrive, 0.0)
         t_sta = jnp.where(sent, start, 0.0)
         if churn:
-            # Outage if the helper is down when the packet arrives or when
-            # it would start computing; degraded phases stretch the runtime
-            # (beta = a + eps/mu, so (beta-a)/speed rescales the random part).
-            if outage_dist == "phase":
-                is_up = (sim._phase_lookup(dyn["up"], t_arr, period)
-                         & sim._phase_lookup(dyn["up"], t_sta, period))
-            else:
-                is_up = ~(sim._interval_hit(dyn["out_start"], dyn["out_end"],
-                                            t_arr, window)
-                          | sim._interval_hit(dyn["out_start"], dyn["out_end"],
-                                              t_sta, window)).any(axis=1)
-            if cell_on:
-                in_cell = dyn["cell_mask"] & (
-                    sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
-                                      t_arr, window)
-                    | sim._interval_hit(dyn["cell_start"], dyn["cell_end"],
-                                        t_sta, window)
-                )
-                is_up &= ~in_cell.any(axis=1)
-            sp = sim._phase_lookup(dyn["speed"], t_sta, period)
-            beta_i = jnp.where(sp == 1.0, x["beta"], a + (x["beta"] - a) / sp)
-            lost = (x["drop"] | ~is_up) & sent
+            beta_i, lost = _churn_step(
+                dyn, a, x["beta"], x["drop"], t_arr, t_sta, sent,
+                period=period, window=window, outage_dist=outage_dist,
+                cell_on=cell_on,
+            )
         else:
             beta_i = x["beta"]
             lost = jnp.zeros((N,), bool)
         if ge_on:
-            # Gilbert–Elliott: loss by the current state, then the per-packet
-            # state transition (the chain advances even for packets already
-            # lost to an outage — the radio fades regardless).
-            p_bad, p_good, l_good, l_bad = dyn["ge_params"]
-            bad = carry["ge_bad"]
-            lost |= (x["ge_u_loss"] < jnp.where(bad, l_bad, l_good)) & sent
-            ge_bad_next = jnp.where(
-                bad, x["ge_u_trans"] >= p_good, x["ge_u_trans"] < p_bad
+            lost_ge, ge_bad_next = _ge_step(
+                carry["ge_bad"], dyn["ge_params"], x["ge_u_trans"],
+                x["ge_u_loss"], sent,
             )
+            lost |= lost_ge
         received = ~lost & sent
         done_ok = start + beta_i
         tr_ok = done_ok + x["d_down"]
@@ -178,19 +299,12 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
             # before the hooks run: the feedback a policy sees at step i is
             # everything an eagerly-decoding collector has recovered from
             # packets 0..i (see docs/policies.md for the causality note).
-            dec = decode_mod.absorb(
-                carry["dec"], aux["decoder"]["tables"],
-                decode_mod.slot_ids(x["i"], N), received,
-            )
-            # Real-time bound on the decode instant: every absorbed result
-            # has arrived by t_hi, so when done first fires the collector
-            # provably holds a decodable set by then (StepCtx doc).
-            t_hi = jnp.maximum(
-                carry["dec_t_hi"], jnp.where(received, tr_ok, 0.0).max()
-            )
-            t_done = jnp.where(
-                dec["done"] & ~jnp.isfinite(carry["dec_t_done"]),
-                t_hi, carry["dec_t_done"],
+            # Fresh coded ids are handed out in send-time order, so early
+            # (systematic) ids go to the helpers that actually send early.
+            ids, sym_next = _send_time_ids(carry["sym_next"], tx, sent)
+            dec, t_hi, t_done = _decode_step(
+                carry["dec"], carry["dec_t_hi"], carry["dec_t_done"],
+                aux["decoder"]["tables"], ids, received, tr_ok,
             )
             dec_kw = dict(decoded_count=dec["count"], ripple=dec["ripple"],
                           decode_done=dec["done"], decode_t_done=t_done)
@@ -205,11 +319,7 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
             tr_prev=carry["tr_prev"], cfg=cfg, max_backoff=max_backoff,
             aux=aux, **dec_kw,
         )
-        pstate = policy.on_computed(carry["pstate"], ctx)
-        tx_next = policy.next_load(pstate, ctx)
-        if churn:
-            pstate, tx_retx = policy.on_timeout(pstate, ctx, tx_next)
-            tx_next = jnp.where(lost, tx_retx, tx_next)
+        pstate, tx_next, b = _hook_step(policy, carry["pstate"], ctx, churn)
 
         new_carry = dict(
             tx=tx_next, done_prev=done,
@@ -222,10 +332,12 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
             new_carry["dec"] = dec
             new_carry["dec_t_hi"] = t_hi
             new_carry["dec_t_done"] = t_done
-        b = policy.backoff(pstate)
+            new_carry["sym_next"] = sym_next
         out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive,
                    beta=jnp.where(sent, beta_i, 0.0), lost=lost,
-                   backoff=b if b is not None else jnp.ones(N))
+                   backoff=b)
+        if use_dec:
+            out["sym_id"] = ids
         return new_carry, out
 
     final, outs = jax.lax.scan(step, carry0, xs)
@@ -300,9 +412,122 @@ def _sim_one(key, cfg, R: int, M: int, policy) -> Dict[str, jnp.ndarray]:
     return res
 
 
+# ---------------------------------------------------------------------------
+# One fleet Monte-Carlo rep: Tt tenants contending for cfg.N shared helpers
+# through the event-clock scan (repro.core.fleet.stream).
+# ---------------------------------------------------------------------------
+
+def _fleet_one(key, cfg, R: int, M: int, policy, fleet) -> Dict[str, jnp.ndarray]:
+    """Full single-rep fleet pipeline as a traceable function of ``key``.
+
+    Mirrors ``_sim_one`` with a leading task axis: the helper draw (and the
+    helper-state churn processes) are shared — the fleet contends for ONE
+    pool — while packet tables and per-packet loss draws are per tenant.
+    Task 0 reuses the single-task draws bit-for-bit (the equivalence spine).
+    """
+    from . import fleet as fleet_mod  # deferred: fleet imports the kernels above
+
+    k_h, k_p = jax.random.split(key)
+    mu, a, rate = sim.draw_helpers(k_h, cfg)
+    Tt = fleet.n_tasks
+    beta, d_up, d_ack, d_down = sim.draw_packet_tables_fleet(
+        k_p, cfg, mu, a, rate, Tt, M, R)
+    c = cfg.ccp_cfg(R)
+    cfg_static = (c.Bx, c.Br, c.Back, c.alpha)
+    release = fleet_mod.draw_releases(jax.random.fold_in(key, 0xF7EE), fleet)
+    recruit, prio = fleet_mod.place(
+        jax.random.fold_in(key, 0xAD31), fleet, cfg, mu, a, rate)
+    per_task_aux = policy.fleet_aux == "per_task"
+    if per_task_aux:
+        # Block policies: one aux per tenant so the fixed allocation
+        # lands on the tenant's recruited helpers (see Policy.prepare_fleet)
+        aux = policy.prepare_fleet(cfg, R, c, mu, a, rate, recruit)
+    else:
+        aux = policy.prepare(cfg, R, c, mu, a, rate)
+    if cfg.churn is None:
+        outs, psum = fleet_mod.fleet_stream(
+            beta, d_up, d_ack, d_down, release, recruit, prio,
+            policy=policy, cfg_static=cfg_static,
+            fleet_static=fleet.static_key(), aux=aux,
+            aux_task_axis=per_task_aux)
+        tx_end = None
+    else:
+        dyn = sim.draw_dynamics_fleet(
+            jax.random.fold_in(key, 0xC0DE), cfg, M, Tt)
+        outs, psum = fleet_mod.fleet_stream(
+            beta, d_up, d_ack, d_down, release, recruit, prio,
+            policy=policy, cfg_static=cfg_static,
+            fleet_static=fleet.static_key(),
+            churn_static=cfg.churn.static_key(), dyn=dyn, a=a, aux=aux,
+            aux_task_axis=per_task_aux)
+        tx_end = outs["tx_end"]
+    kk = R + cfg.K(R)
+    if per_task_aux:
+        mask = jax.vmap(lambda at: policy.packet_mask(at, cfg.N, M))(aux)
+    else:
+        mask = policy.packet_mask(aux, cfg.N, M)
+    per_keys = ("tr", "idle", "tx", "arrive", "beta", "lost", "backoff")
+    if policy.uses_decoder:
+        per_keys += ("sym_id",)
+    task_outs = {k: outs[k] for k in per_keys}
+
+    def _finish(outs_t, tx_end_t, aux_t, mask_t):
+        # Per-task completion + per-helper statistics: the same extraction
+        # as _sim_one, vmapped over the task axis (aux/mask mapped per
+        # task for fleet_aux == "per_task" block policies, else shared).
+        t, valid = policy.finalize(outs_t, aux_t, cfg, R, kk, tx_end_t)
+        if mask_t is None:
+            tr_eff, idle_eff, beta_eff = (
+                outs_t["tr"], outs_t["idle"], outs_t["beta"])
+        else:
+            tr_eff = jnp.where(mask_t, outs_t["tr"], jnp.inf)
+            idle_eff = jnp.where(mask_t, outs_t["idle"], 0.0)
+            beta_eff = jnp.where(mask_t, outs_t["beta"], 0.0)
+        eff = sim.efficiency_measured(tr_eff, idle_eff, beta_eff, t)
+        r_n = (jnp.isfinite(tr_eff) & (tr_eff <= t)).sum(axis=1)
+        n_sent = jnp.isfinite(outs_t["tx"]).sum(axis=1)
+        m_steps = outs_t["lost"].shape[1]
+        lost_frac = outs_t["lost"].mean(axis=1) * (
+            m_steps / jnp.maximum(n_sent, 1))
+        return dict(T=t, valid=valid, efficiency=eff, r_n=r_n,
+                    max_backoff=outs_t["backoff"].max(axis=1),
+                    lost_frac=lost_frac)
+
+    aux_ax = 0 if per_task_aux else None
+    if tx_end is None:
+        res = jax.vmap(lambda o, at, mt: _finish(o, None, at, mt),
+                       in_axes=(0, aux_ax, aux_ax))(task_outs, aux, mask)
+    else:
+        res = jax.vmap(_finish, in_axes=(0, 0, aux_ax, aux_ax))(
+            task_outs, tx_end, aux, mask)
+    res["release"] = release
+    res["sojourn"] = res["T"] - release
+    # Fleet-level metrics: helper utilization over the rep's makespan and
+    # Jain fairness over the valid tenants' sojourn times.
+    vmask = res["valid"] & jnp.isfinite(res["T"])
+    makespan = jnp.max(jnp.where(vmask, res["T"], -jnp.inf))
+    res["makespan"] = makespan
+    res["util"] = fleet_mod.helper_utilization(
+        outs["beta"], outs["tr"], d_down, makespan)
+    res["fairness"] = fleet_mod.jain_fairness(res["sojourn"], vmask)
+    res.update(mu=mu, a=a, rate=rate)
+    for k in getattr(policy, "report_aux", ()):
+        res[f"x_{k}"] = aux[k]
+    for k, v in psum.items():
+        res[f"x_{k}"] = v
+    return res
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "policy"))
 def _sim_one_jit(key, cfg, R, M, policy):
     return _sim_one(key, cfg, R, M, policy)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "R", "M", "policy", "fleet")
+)
+def _fleet_batch_jit(keys, cfg, R, M, policy, fleet):
+    return jax.vmap(lambda k: _fleet_one(k, cfg, R, M, policy, fleet))(keys)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "R", "M", "policy"))
@@ -423,6 +648,79 @@ class RunResult:
         return d
 
 
+_FLEET_FIELDS = ("T", "sojourn", "release", "valid", "efficiency", "r_n",
+                 "mu", "a", "rate", "max_backoff", "lost_frac", "util",
+                 "fairness", "makespan")
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=list(_FLEET_FIELDS) + ["extras"],
+    meta_fields=["M", "policy", "n_tasks", "discipline"],
+)
+@dataclasses.dataclass
+class FleetRunResult:
+    """Structured result of ``Engine.run_fleet`` over B reps of a
+    ``n_tasks``-tenant fleet sharing ``cfg.N`` helpers.
+
+    T / sojourn / release / valid: (B, n_tasks) per-task completion time
+    (absolute), completion minus release, release time, and certification
+    mask (an uncertified task MUST be dropped and counted, never averaged);
+    efficiency / r_n / max_backoff / lost_frac: (B, n_tasks, N) per-task
+    per-helper statistics; mu / a / rate: (B, N) shared helper draws; util:
+    (B, N) per-helper busy fraction inside the rep's makespan; fairness:
+    (B,) Jain index over the valid tasks' sojourns; makespan: (B,) last
+    valid completion.  ``summary()`` reduces the batch to the scalars the
+    ``fig_fleet`` sweep plots.
+    """
+
+    T: np.ndarray
+    sojourn: np.ndarray
+    release: np.ndarray
+    valid: np.ndarray
+    efficiency: np.ndarray
+    r_n: np.ndarray
+    mu: np.ndarray
+    a: np.ndarray
+    rate: np.ndarray
+    max_backoff: np.ndarray
+    lost_frac: np.ndarray
+    util: np.ndarray
+    fairness: np.ndarray
+    makespan: np.ndarray
+    extras: Dict[str, np.ndarray]
+    M: int
+    policy: str
+    n_tasks: int
+    discipline: str
+
+    def __getitem__(self, key):
+        return self.as_dict()[key]
+
+    def keys(self):
+        return self.as_dict().keys()
+
+    def as_dict(self) -> Dict[str, np.ndarray]:
+        d = {f: getattr(self, f) for f in _FLEET_FIELDS}
+        d.update(self.extras)
+        d["M"] = self.M
+        return d
+
+    def summary(self) -> Dict[str, float]:
+        """Batch scalars for the saturation sweep: p50/p99 sojourn over the
+        certified tasks, mean helper utilization and fairness, and the
+        uncertified-task count."""
+        ok = np.asarray(self.valid, bool) & np.isfinite(self.sojourn)
+        soj = np.asarray(self.sojourn)[ok]
+        return dict(
+            p50=float(np.percentile(soj, 50)) if soj.size else float("nan"),
+            p99=float(np.percentile(soj, 99)) if soj.size else float("nan"),
+            util_mean=float(np.nanmean(np.asarray(self.util))),
+            fairness_mean=float(np.nanmean(np.asarray(self.fairness))),
+            invalid=int((~np.asarray(self.valid, bool)).sum()),
+        )
+
+
 class Engine:
     """Single entry point for policy-driven Monte-Carlo simulation.
 
@@ -450,7 +748,7 @@ class Engine:
         policy = _as_policy(policy)
         shard = self.shard if shard is None else shard
         devices = self.devices if devices is None else devices
-        keys = jnp.asarray(keys)
+        keys = _check_inputs(keys, R)
         kk = R + cfg.K(R)
         cap = _m_cap(cfg, kk, policy)
         M = _initial_m(sim._horizon_shared(cfg, R), cfg, R, kk, cap, policy,
@@ -468,11 +766,51 @@ class Engine:
         core = {k: v for k, v in res.items() if not k.startswith("x_")}
         return RunResult(M=M, policy=policy.name, extras=extras, **core)
 
+    def run_fleet(self, cfg, policy, keys, R: int, *, fleet=None,
+                  M_override: Optional[int] = None) -> FleetRunResult:
+        """Multi-tenant event-clock run: ``fleet.n_tasks`` concurrent tasks
+        contend for the ``cfg.N`` shared helpers under the configured
+        service discipline and admission rule (see docs/fleet.md).
+
+        ``fleet`` is a :class:`repro.core.fleet.FleetConfig` (default: one
+        task, all helpers, FIFO).  At ``n_tasks=1`` with the default
+        all-helpers placement the event-clock scan is bit-for-bit
+        ``Engine.run`` for every registered policy — the equivalence-spine
+        tests in ``tests/test_fleet.py`` pin this against the goldens.
+        Certification works as in :meth:`run`: the shared horizon doubles
+        until every (rep, task) completion is certified or the cap is hit.
+        """
+        from . import fleet as fleet_mod
+
+        policy = _as_policy(policy)
+        fleet = fleet_mod.FleetConfig() if fleet is None else fleet
+        keys = _check_inputs(keys, R)
+        kk = R + cfg.K(R)
+        cap = _m_cap(cfg, kk, policy)
+        M = _initial_m(sim._horizon_shared(cfg, R), cfg, R, kk, cap, policy,
+                       M_override)
+        for _ in range(8):
+            out = _fleet_batch_jit(keys, cfg, R, M, policy, fleet)
+            if bool(out["valid"].all()) or M >= cap or M_override is not None:
+                break
+            M = min(M * 2, cap)
+        res = {k: np.asarray(v) for k, v in out.items()}
+        extras = {k[2:]: v for k, v in res.items() if k.startswith("x_")}
+        core = {k: v for k, v in res.items() if not k.startswith("x_")}
+        return FleetRunResult(M=M, policy=policy.name,
+                              n_tasks=fleet.n_tasks,
+                              discipline=fleet.discipline,
+                              extras=extras, **core)
+
     def run_one(self, key, cfg, policy, R: int, *,
                 M_override: Optional[int] = None) -> Dict[str, np.ndarray]:
         """Sequential single-rep runner (grows the horizon per draw);
         mirrors the legacy ``simulator._run_mode`` contract."""
         policy = _as_policy(policy)
+        if isinstance(R, bool) or not isinstance(R, (int, np.integer)) or R <= 0:
+            raise ValueError(
+                f"R must be a positive int (source packets per task), got {R!r}"
+            )
         k_h, _ = jax.random.split(key)
         mu, a, _rate = sim.draw_helpers(k_h, cfg)
         kk = R + cfg.K(R)

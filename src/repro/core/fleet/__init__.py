@@ -1,0 +1,31 @@
+"""Multi-tenant fleet layer: shared helpers, queues, admission, metrics.
+
+The single-task engine (:mod:`repro.core.engine`) gives each task a
+dedicated pool of N helpers.  This package models the edge setting where
+T tenants *share* the pool: :class:`FleetConfig` describes the fleet
+shape, :func:`fleet_stream` runs the event-clock scan that serializes
+per-helper busy time across tenants (:mod:`.queues` has the service
+disciplines), :mod:`.admission` decides who recruits whom and when tasks
+release, and :mod:`.metrics` reduces a fleet trace to utilization /
+fairness.  Entry point: :meth:`repro.core.engine.Engine.run_fleet`.
+"""
+
+from .queues import DISCIPLINES, serve_round
+from .config import ARRIVALS, FleetConfig
+from .admission import PLACEMENTS, draw_releases, place, register_placement
+from .metrics import helper_utilization, jain_fairness
+from .stream import fleet_stream
+
+__all__ = [
+    "ARRIVALS",
+    "DISCIPLINES",
+    "FleetConfig",
+    "PLACEMENTS",
+    "draw_releases",
+    "fleet_stream",
+    "helper_utilization",
+    "jain_fairness",
+    "place",
+    "register_placement",
+    "serve_round",
+]

@@ -1,0 +1,123 @@
+"""Admission control: which helpers each tenant recruits, and when tasks
+release.
+
+A placement rule maps ``(key, fleet, cfg, mu, a, rate)`` to a (T, N) bool
+recruit mask — task t's stream to helper n exists iff ``recruit[t, n]``
+(a non-recruited stream simply never sends: its tx stays +inf, the
+engine's standard stopped-stream sentinel).  Rules are registered by name
+so experiments can plug in custom admission logic without touching the
+engine:
+
+    @fleet.register_placement("my_rule")
+    def my_rule(key, fleet, cfg, mu, a, rate):
+        return recruit_mask  # (n_tasks, cfg.N) bool
+
+Built-ins: ``all`` (every tenant recruits the whole pool), ``striped``
+(contiguous blocks of ``helpers_per_task``, disjoint while they fit —
+the controlled way to sweep offered load past the saturation knee),
+``random`` (independent uniform recruit sets per tenant), ``fastest``
+(every tenant chases the same top helpers by expected service rate
+``1/E[beta] = 1/(a + 1/mu)`` — maximal contention on the fast helpers,
+the stress case for queue-aware pacing).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PLACEMENTS", "register_placement", "place", "draw_releases"]
+
+PLACEMENTS: Dict[str, Callable] = {}
+
+
+def register_placement(name: str, fn: Callable = None):
+    """Register a placement rule under ``name`` (usable as a decorator)."""
+    if fn is None:
+        return lambda f: register_placement(name, f)
+    PLACEMENTS[name] = fn
+    return fn
+
+
+def _h_eff(fleet, n: int) -> int:
+    """Recruit-set size: the configured ``helpers_per_task`` or a fair
+    partition of the pool, never below 1 nor above N."""
+    h = fleet.helpers_per_task
+    if h is None:
+        h = max(n // fleet.n_tasks, 1)
+    return min(h, n)
+
+
+@register_placement("all")
+def _place_all(key, fleet, cfg, mu, a, rate):
+    return jnp.ones((fleet.n_tasks, cfg.N), bool)
+
+
+@register_placement("striped")
+def _place_striped(key, fleet, cfg, mu, a, rate):
+    """Task t recruits the h contiguous helpers starting at t*h (mod N):
+    disjoint pools while ``n_tasks * h <= N``, wrapping into overlap
+    beyond — offered load grows linearly with the tenant count."""
+    n = cfg.N
+    h = _h_eff(fleet, n)
+    t_idx = jnp.arange(fleet.n_tasks)[:, None]
+    idx = (t_idx * h + jnp.arange(h)[None, :]) % n
+    return jnp.zeros((fleet.n_tasks, n), bool).at[
+        jnp.broadcast_to(t_idx, idx.shape), idx].set(True)
+
+
+@register_placement("random")
+def _place_random(key, fleet, cfg, mu, a, rate):
+    n = cfg.N
+    h = _h_eff(fleet, n)
+
+    def one(k):
+        perm = jax.random.permutation(k, n)
+        return jnp.zeros((n,), bool).at[perm[:h]].set(True)
+
+    return jax.vmap(one)(jax.random.split(key, fleet.n_tasks))
+
+
+@register_placement("fastest")
+def _place_fastest(key, fleet, cfg, mu, a, rate):
+    n = cfg.N
+    h = _h_eff(fleet, n)
+    w = 1.0 / (a + 1.0 / mu)  # expected service rate 1/E[beta]
+    row = jnp.zeros((n,), bool).at[jnp.argsort(-w)[:h]].set(True)
+    return jnp.broadcast_to(row[None], (fleet.n_tasks, n))
+
+
+def place(key, fleet, cfg, mu, a, rate):
+    """Resolve the fleet's placement rule and priority keys.
+
+    Returns ``(recruit, prio)``: recruit (T, N) bool, prio (T,) f32 —
+    smaller priority is served first under the 'priority' discipline.
+    Unknown rules raise with the known list (the fail-loudly contract of
+    the policy registry, applied to placements)."""
+    if fleet.placement not in PLACEMENTS:
+        raise ValueError(
+            f"unknown placement {fleet.placement!r}; known: "
+            f"{sorted(PLACEMENTS)} (register_placement adds custom rules)"
+        )
+    recruit = PLACEMENTS[fleet.placement](key, fleet, cfg, mu, a, rate)
+    if fleet.priority is not None:
+        prio = jnp.asarray(fleet.priority, dtype=jnp.float32)
+    else:
+        prio = jnp.arange(fleet.n_tasks, dtype=jnp.float32)
+    return recruit, prio
+
+
+def draw_releases(key, fleet):
+    """(T,) task release times under ``fleet.arrival``.  Task 0 always
+    releases at t=0, so a 1-task fleet reproduces the single-task engine
+    exactly; 'uniform' spaces tasks deterministically at 1/load, 'poisson'
+    draws exponential inter-arrivals at rate ``load``."""
+    T = fleet.n_tasks
+    if fleet.arrival == "batch":
+        return jnp.zeros(T)
+    if fleet.arrival == "uniform":
+        return jnp.arange(T) / fleet.load
+    gaps = jax.random.exponential(key, (T,)) / fleet.load
+    return jnp.concatenate([jnp.zeros(1), jnp.cumsum(gaps[1:])])

@@ -1,0 +1,40 @@
+"""Fleet-level metrics: fairness and helper utilization.
+
+These reduce the per-(task, helper, packet) trace of one fleet rep to the
+scalars the saturation sweep plots (``benchmarks/fig_fleet.py``): how
+evenly the tenants' sojourn times came out (Jain), and how busy each
+helper was inside the rep's makespan.  Both are pure jnp and run inside
+the jitted per-rep pipeline (``engine._fleet_one``); the batch-level p50 /
+p99 reductions live host-side in ``FleetRunResult.summary()``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["jain_fairness", "helper_utilization"]
+
+
+def jain_fairness(x, valid):
+    """Jain's fairness index ``J = (sum x)^2 / (n * sum x^2)`` over the
+    valid entries of ``x``: 1.0 when every tenant saw the same sojourn,
+    1/n when one tenant ate the whole delay budget.  NaN when no entry is
+    valid (the rep must be dropped anyway)."""
+    xv = jnp.where(valid, x, 0.0)
+    n = valid.sum()
+    den = n * (xv ** 2).sum()
+    return jnp.where(den > 0, xv.sum() ** 2 / den, jnp.nan)
+
+
+def helper_utilization(beta, tr, d_down, t_end):
+    """Per-helper busy fraction inside the fleet makespan ``[0, t_end]``:
+    served compute work whose *finish* instant (``tr - d_down`` for a
+    delivered packet) landed by ``t_end``, over ``t_end``.  ``beta`` /
+    ``tr`` / ``d_down`` are (T, N, M) fleet traces (or (N, M) single-task
+    ones); returns (N,).  Work a helper performs after the last certified
+    completion — packets nobody needed — does not count, so an
+    over-provisioned pool shows honest sub-1.0 utilization."""
+    fin = tr - d_down
+    served = jnp.where(jnp.isfinite(tr) & (fin <= t_end), beta, 0.0)
+    axes = (0, 2) if served.ndim == 3 else (1,)
+    return jnp.where(t_end > 0, served.sum(axis=axes) / t_end, 0.0)

@@ -1,0 +1,137 @@
+"""Per-helper service disciplines for one event-clock round.
+
+The fleet scan hands each helper the round's batch of tenant jobs — an
+arrival time, a service demand (the churn-scaled runtime), and an active
+mask — plus the helper's carried busy time, and the discipline serializes
+them:
+
+``fifo`` / ``priority``
+    Non-preemptive, work-conserving, one greedy selection per job: whenever
+    the server frees at time ``t`` it serves the pending (arrived,
+    unserved) job with the smallest order key — the arrival time for FIFO,
+    the per-task priority for ``priority`` (ties -> lowest task index) —
+    and if nothing has arrived yet it idles until the earliest pending
+    arrival.  Each served job runs ``start = max(arrive, t)`` to
+    ``start + demand``.
+
+``ps``
+    Egalitarian processor sharing, event-exact: between consecutive events
+    (a job entering at its effective arrival ``max(arrive, busy)``, or the
+    minimum-remaining job finishing) the ``n`` jobs in system each progress
+    at rate ``1/n``.  At a completion event the applied share is exactly
+    the minimum remaining work, so the finishing job hits zero with no
+    epsilon.  At most T entries + T completions happen, so ``2T + 1``
+    fixed iterations reach the fixpoint; converged iterations are no-ops.
+
+Work conservation (pinned by ``tests/test_fleet.py``): for every
+discipline, ``busy_end - busy == sum(demand of active jobs) + sum(idle)``
+— the server is never idle while work is queued, and every active job's
+demand is served in full.
+
+Single-tenant equivalence: with one job the three disciplines all reduce
+to the dedicated-helper recurrence ``start = max(arrive, busy); finish =
+start + demand; idle = max(arrive - busy, 0)`` — bit-for-bit, which is the
+per-helper piece of the fleet-at-M=1 == single-task engine guarantee.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DISCIPLINES", "serve_round"]
+
+DISCIPLINES = ("fifo", "priority", "ps")
+
+
+def _greedy_serve(arrive, demand, active, busy, order_key):
+    """Non-preemptive work-conserving service of one round's (T,) jobs on
+    one helper (module doc).  Returns ``(start, finish, idle, busy_end)``;
+    inactive jobs keep zeros and do not advance the clock."""
+    T = arrive.shape[0]
+    zeros = jnp.zeros(T)
+
+    def body(carry, _):
+        t, unserved, start, fin, idle = carry
+        cand = unserved & active
+        serve = cand.any()
+        arrived = cand & (arrive <= t)
+        pick = jnp.where(
+            arrived.any(),
+            jnp.where(arrived, order_key, jnp.inf),
+            jnp.where(cand, arrive, jnp.inf),
+        )
+        j = jnp.argmin(pick)  # ties -> lowest task index
+        st = jnp.maximum(arrive[j], t)
+        fi = st + demand[j]
+        gap = jnp.maximum(arrive[j] - t, 0.0)
+        start = jnp.where(serve, start.at[j].set(st), start)
+        fin = jnp.where(serve, fin.at[j].set(fi), fin)
+        idle = jnp.where(serve, idle.at[j].set(gap), idle)
+        unserved = jnp.where(serve, unserved.at[j].set(False), unserved)
+        t = jnp.where(serve, fi, t)
+        return (t, unserved, start, fin, idle), None
+
+    (t, _, start, fin, idle), _ = jax.lax.scan(
+        body, (busy, active, zeros, zeros, zeros), None, length=T)
+    return start, fin, idle, t
+
+
+def _ps_serve(arrive, demand, active, busy, order_key):
+    """Event-exact egalitarian processor sharing (module doc).  A job's
+    ``start`` is its entry instant ``max(arrive, busy)``; its ``finish``
+    stretches with the number of concurrent jobs.  ``order_key`` is unused
+    (PS has no order).  Demands must be positive (the engine's runtimes
+    are ``a + eps/mu > 0``); a zero-demand active job would never finish."""
+    del order_key
+    T = arrive.shape[0]
+    entry = jnp.where(active, jnp.maximum(arrive, busy), jnp.inf)
+
+    def body(_, carry):
+        t, rem, start, fin, idle = carry
+        in_sys = active & (entry <= t) & (rem > 0.0)
+        n = in_sys.sum().astype(rem.dtype)
+        pending = active & (entry > t) & (rem > 0.0)
+        t_entry = jnp.min(jnp.where(pending, entry, jnp.inf))
+        m = jnp.min(jnp.where(in_sys, rem, jnp.inf))
+        t_comp = jnp.where(n > 0, t + m * n, jnp.inf)
+        te = jnp.minimum(t_entry, t_comp)
+        go = jnp.isfinite(te)
+        # Service over [t, te): at a completion event the share is exactly
+        # m, so the minimum-remaining job hits zero with no epsilon.
+        share = jnp.where(t_comp <= t_entry, m, (te - t) / jnp.maximum(n, 1.0))
+        rem2 = jnp.where(in_sys, jnp.maximum(rem - share, 0.0), rem)
+        fin2 = jnp.where(in_sys & (rem2 <= 0.0), te, fin)
+        entering = pending & (entry <= te)
+        # An empty server idles from t to te; attribute the gap to the jobs
+        # that end it (split evenly, so per-helper idle sums stay exact).
+        gap = jnp.where(n > 0, 0.0, te - t)
+        k_in = jnp.maximum(entering.sum().astype(gap.dtype), 1.0)
+        idle2 = jnp.where(entering, idle + gap / k_in, idle)
+        start2 = jnp.where(entering, entry, start)
+        nxt = (te, rem2, start2, fin2, idle2)
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(go, new, old), nxt, carry)
+
+    start0 = jnp.where(active & (entry <= busy), entry, 0.0)
+    init = (busy, jnp.where(active, demand, 0.0), start0,
+            jnp.zeros(T), jnp.zeros(T))
+    t, _rem, start, fin, idle = jax.lax.fori_loop(0, 2 * T + 1, body, init)
+    return start, fin, idle, t
+
+
+def serve_round(arrive, demand, active, busy, order_key, discipline: str):
+    """Serialize one round's jobs on every helper under ``discipline``.
+
+    arrive / demand / active / order_key: (T, N) per-(task, helper) job
+    attributes (inactive jobs are ignored); busy: (N,) per-helper free
+    time.  Returns ``(start, finish, idle, busy_end)`` with start / finish
+    / idle (T, N) (zeros for inactive jobs) and busy_end (N,).
+    """
+    if discipline not in DISCIPLINES:
+        raise ValueError(
+            f"unknown discipline {discipline!r}; known: {DISCIPLINES}"
+        )
+    fn = _ps_serve if discipline == "ps" else _greedy_serve
+    return jax.vmap(fn, in_axes=(1, 1, 1, 0, 1), out_axes=(1, 1, 1, 0))(
+        arrive, demand, active, busy, order_key)

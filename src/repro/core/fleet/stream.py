@@ -1,0 +1,245 @@
+"""The event-clock fleet scan: one shared helper pool, many tenants.
+
+``fleet_stream`` generalizes :func:`repro.core.engine.policy_stream` from
+"one task, N dedicated helpers" to T tasks contending for the same N
+helpers.  The scan step is one *round* of the global virtual clock: every
+task contributes the current packet of each of its (task, helper) streams,
+the round's arrivals at each helper are serialized by the configured
+service discipline against the helper's carried busy time
+(:func:`repro.core.fleet.queues.serve_round`), and the policy hooks then
+run per task on exactly the step kernels the single-task scan uses
+(``engine._churn_step`` / ``_ge_step`` / ``_decode_step`` /
+``_hook_step``) — which is why a 1-task fleet is bit-for-bit the
+single-task engine (tests/test_fleet.py pins this against the goldens for
+every registered policy).
+
+Causality (mirrors the decoder's step-aligned idealization in
+docs/policies.md): rounds serialize through the per-helper busy-time
+carry, so cross-round ordering is always causally consistent; two jobs
+*within* one round are ordered by the discipline alone, not by the global
+interleaving of arrivals across rounds.  Under CCP-style pacing — at most
+one outstanding packet per stream per helper — the approximation error is
+bounded by one in-flight packet per tenant.
+
+Churn under contention: the helper-state lookups (outage, slowdown, GE
+loss) must be evaluated *before* same-round peers are serialized — a job's
+queue position depends on which peers were lost this round, so evaluating
+churn after serialization would be circular.  The reference time is
+``t_sta0 = max(arrive, busy)``, the start the job would see on a dedicated
+helper; at T=1 that IS the single-task start, so the shortcut costs
+nothing where it must cost nothing.
+
+Admission composes with the stopped-stream sentinel: a non-recruited
+(task, helper) stream starts at tx = +inf and every registered policy
+propagates +inf (``next_load`` of a never-started stream returns +inf), so
+no recruit masking is needed inside the step.
+
+The decoder-in-the-loop path runs one independent peeling decoder per
+tenant (tasks are separate computations; they share helpers, not
+symbols), with per-task send-time symbol ids and the per-task
+``decode_t_done`` real-time gate preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import ccp as ccp_mod
+from .. import engine
+from .. import policies as policies_mod
+from . import queues
+
+__all__ = ["fleet_stream"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "cfg_static", "fleet_static", "churn_static",
+                     "aux_task_axis"),
+)
+def fleet_stream(beta, d_up, d_ack, d_down, release, recruit, prio, policy,
+                 cfg_static, fleet_static, churn_static=None, dyn=None,
+                 a=None, aux=None, aux_task_axis=False):
+    """Simulate M rounds of T tenant streams over N shared helpers.
+
+    beta / d_up / d_ack / d_down: (T, N, M) per-tenant packet tables
+    (:func:`repro.core.simulator.draw_packet_tables_fleet`); release (T,)
+    task release times; recruit (T, N) bool admission mask; prio (T,)
+    priority keys (smaller = served first under the 'priority'
+    discipline).  ``fleet_static`` is the service discipline
+    (``FleetConfig.static_key()``); cfg_static / churn_static / dyn / a /
+    aux as in :func:`~repro.core.engine.policy_stream` (``dyn`` from
+    :func:`~repro.core.simulator.draw_dynamics_fleet`).  With
+    ``aux_task_axis=True`` every aux leaf carries a leading task axis
+    (``Policy.prepare_fleet`` — recruit-aware block allocations) and the
+    per-task slice is what reaches the hooks as ``ctx.aux``.
+
+    Returns ``(outs, psummary)``: outs holds (T, N, M) trace arrays (tr,
+    idle, tx, arrive, beta, lost, backoff, queue_delay, and ``sym_id``
+    for decoder policies), the (N, M) per-round ``contention`` counts,
+    ``tx_end`` (T, N) and ``busy_end`` (N,); psummary is the policy
+    summary with a leading task axis.
+    """
+    Bx, Br, Back, alpha = cfg_static
+    cfg = ccp_mod.CCPConfig(Bx=Bx, Br=Br, Back=Back, alpha=alpha)
+    Tt, N, M = beta.shape
+    discipline = fleet_static
+    aux = {} if aux is None else aux
+    churn = churn_static is not None
+    ge_on = cell_on = False
+    outage_dist = "phase"
+    max_backoff = None
+    if churn:
+        (period, max_backoff, outage_dist, ge_on,
+         cell_on) = engine._parse_churn_static(churn_static)
+        window = period * dyn["speed"].shape[1]
+    use_dec = bool(policy.uses_decoder)
+    if use_dec and aux_task_axis:
+        raise NotImplementedError(
+            "fleet_aux='per_task' is incompatible with uses_decoder: the "
+            "decoder tables/state0 under aux must be shared")
+
+    bcast = lambda v: jnp.broadcast_to(v[None], (Tt,) + jnp.shape(v))
+    carry0 = dict(
+        # A stream exists iff recruited; non-recruited streams are the
+        # standard stopped-stream sentinel (tx = +inf, never sends).
+        tx=jnp.where(recruit, release[:, None], jnp.inf),
+        busy=jnp.zeros(N),
+        tr_prev=jnp.zeros((Tt, N)),
+        pstate=jax.tree_util.tree_map(bcast, policy.init(N)),
+    )
+    if use_dec:
+        carry0["dec"] = jax.tree_util.tree_map(
+            bcast, aux["decoder"]["state0"])
+        carry0["dec_t_hi"] = jnp.zeros(Tt)
+        carry0["dec_t_done"] = jnp.full(Tt, jnp.inf)
+        carry0["sym_next"] = jnp.zeros(Tt, jnp.int32)
+
+    mv = lambda v: jnp.moveaxis(v, -1, 0)  # (T, N, M) -> (M, T, N)
+    xs = dict(beta=mv(beta), d_up=mv(d_up), d_ack=mv(d_ack),
+              d_down=mv(d_down), i=jnp.arange(M))
+    if churn:
+        xs["drop"] = mv(dyn["drop"])
+    if ge_on:
+        carry0["ge_bad"] = dyn["ge_bad0"]          # one chain per helper
+        xs["ge_u_trans"] = dyn["ge_u_trans"].T     # (M, N) shared advance
+        xs["ge_u_loss"] = mv(dyn["ge_u_loss"])     # (M, T, N) per tenant
+
+    def step(carry, x):
+        tx = carry["tx"]
+        busy = carry["busy"]
+        sent = jnp.isfinite(tx)
+        arrive = tx + x["d_up"]
+        # Dedicated-helper reference start: churn/GE state for this round
+        # is evaluated here, before same-round peers serialize (module
+        # doc); at T=1 this IS the single-task start.
+        t_sta0 = jnp.maximum(arrive, busy[None, :])
+        t_arr = jnp.where(sent, arrive, 0.0)
+        t_sta = jnp.where(sent, t_sta0, 0.0)
+        if churn:
+            beta_i, lost = jax.vmap(
+                lambda bx, dr, ta, ts, sn: engine._churn_step(
+                    dyn, a, bx, dr, ta, ts, sn, period=period,
+                    window=window, outage_dist=outage_dist, cell_on=cell_on)
+            )(x["beta"], x["drop"], t_arr, t_sta, sent)
+        else:
+            beta_i = x["beta"]
+            lost = jnp.zeros((Tt, N), bool)
+        if ge_on:
+            lost_ge, ge_bad_next = engine._ge_step(
+                carry["ge_bad"], dyn["ge_params"], x["ge_u_trans"],
+                x["ge_u_loss"], sent)
+            lost = lost | lost_ge
+        received = ~lost & sent
+
+        # --- shared-helper serialization: this round's tenants queue ---
+        demand = jnp.where(received, beta_i, 0.0)
+        if discipline == "priority":
+            order_key = jnp.broadcast_to(prio[:, None], (Tt, N))
+        else:
+            order_key = arrive
+        start_q, fin_q, idle, busy_next = queues.serve_round(
+            arrive, demand, received, busy, order_key, discipline)
+        start = jnp.where(received, start_q, t_sta0)
+        # Lost packets never occupy the helper; their hypothetical return
+        # (for the policy's timeout arithmetic) assumes the dedicated start.
+        tr_ok = jnp.where(received, fin_q, t_sta0 + beta_i) + x["d_down"]
+        tr = jnp.where(received, tr_ok, jnp.inf)
+        queue_delay = jnp.where(received, start_q - t_sta0, 0.0)
+        contention = received.sum(axis=0).astype(jnp.int32)
+        rtt_ack = x["d_up"] + x["d_ack"]
+
+        if use_dec:
+            ids, sym_next = jax.vmap(engine._send_time_ids)(
+                carry["sym_next"], tx, sent)
+            tables = aux["decoder"]["tables"]
+            dec, t_hi, t_done = jax.vmap(
+                lambda d, hi, dn, ii, rc, tk: engine._decode_step(
+                    d, hi, dn, tables, ii, rc, tk)
+            )(carry["dec"], carry["dec_t_hi"], carry["dec_t_done"], ids,
+              received, tr_ok)
+            dec_kw = dict(decoded_count=dec["count"], ripple=dec["ripple"],
+                          decode_done=dec["done"], decode_t_done=t_done)
+        else:
+            dec = None
+            dec_kw = {}
+
+        # Policy hooks per tenant: StepCtx is not a pytree, so it is built
+        # inside the vmapped per-task closure; cfg/contention are shared
+        # (closed over), per-task slices are mapped — including the aux
+        # when it carries a task axis (recruit-aware block allocations).
+        def hooks_one(pstate, tx_t, arrive_t, start_t, beta_t, trok_t,
+                      lost_t, recv_t, rtt_t, dup_t, ddown_t, dack_t,
+                      trprev_t, qd_t, dk, aux_t):
+            ctx = policies_mod.StepCtx(
+                i=x["i"], n=N, tx=tx_t, arrive=arrive_t, start=start_t,
+                beta=beta_t, tr_ok=trok_t, lost=lost_t, received=recv_t,
+                rtt_ack=rtt_t, d_up=dup_t, d_down=ddown_t, d_ack=dack_t,
+                tr_prev=trprev_t, cfg=cfg, max_backoff=max_backoff,
+                aux=aux_t, queue_delay=qd_t, contention=contention, **dk)
+            return engine._hook_step(policy, pstate, ctx, churn)
+
+        aux_ax = 0 if aux_task_axis else None
+        pstate, tx_next, b = jax.vmap(
+            hooks_one,
+            in_axes=(0,) * 14 + (0, aux_ax),
+        )(carry["pstate"], tx, arrive, start, beta_i, tr_ok, lost,
+          received, rtt_ack, x["d_up"], x["d_down"], x["d_ack"],
+          carry["tr_prev"], queue_delay, dec_kw, aux)
+
+        new_carry = dict(
+            tx=tx_next, busy=busy_next,
+            tr_prev=jnp.where(received, tr_ok, carry["tr_prev"]),
+            pstate=pstate,
+        )
+        if ge_on:
+            new_carry["ge_bad"] = ge_bad_next
+        if use_dec:
+            new_carry["dec"] = dec
+            new_carry["dec_t_hi"] = t_hi
+            new_carry["dec_t_done"] = t_done
+            new_carry["sym_next"] = sym_next
+        out = dict(tr=tr, idle=idle, tx=tx, arrive=arrive,
+                   beta=jnp.where(sent, beta_i, 0.0), lost=lost,
+                   backoff=b, queue_delay=queue_delay,
+                   contention=contention)
+        if use_dec:
+            out["sym_id"] = ids
+        return new_carry, out
+
+    final, outs = jax.lax.scan(step, carry0, xs)
+    res = {k: jnp.moveaxis(v, 0, -1) for k, v in outs.items()}
+    res["tx_end"] = final["tx"]
+    res["busy_end"] = final["busy"]
+    pstate_final = final["pstate"]
+    if jax.tree_util.tree_leaves(pstate_final):
+        psum = jax.vmap(policy.summary)(pstate_final)
+    else:  # stateless policy: summary({}) carries no per-helper arrays
+        psum = policy.summary(pstate_final)
+    if use_dec:
+        psum = dict(psum, dec_count=final["dec"]["count"],
+                    dec_done=final["dec"]["done"])
+    return res, psum

@@ -61,6 +61,15 @@ stop a helper's stream by returning ``+inf`` from ``next_load`` — the
 engine treats never-sent packets as non-events (not losses, no idle, no
 decoder absorb).
 
+Event-clock fleet runs (``Engine.run_fleet``) drive the *same* hooks once
+per tenant per round, with ``StepCtx.queue_delay`` / ``StepCtx.contention``
+populated (None on the single-task path); a policy written against this
+contract needs no change to run under contention.  Fixed-allocation block
+policies additionally declare ``fleet_aux = "per_task"`` so
+:meth:`Policy.prepare_fleet` re-allocates their loads over each tenant's
+recruit set.  See docs/fleet.md and the event-clock section of
+docs/policies.md.
+
 Policies are frozen dataclasses (hashable) so a policy instance can be a
 static jit argument; per-rep data must flow through ``aux``/``state``,
 never through instance attributes.
@@ -123,6 +132,16 @@ class StepCtx:
     # are provably useless.  Stop rules must gate on this, not on
     # decode_done alone.
     decode_t_done: Optional[jnp.ndarray] = None  # () f32 (+inf before done)
+    # Fleet contention observability (populated only by the event-clock
+    # fleet scan, :mod:`repro.core.fleet.stream`; None on the dedicated
+    # single-task path).  ``queue_delay`` is how long this packet waited
+    # behind other tenants at its helper (compute start minus the start it
+    # would have seen on a dedicated pool); ``contention`` is how many
+    # tenants each helper served this round (shared across tasks).  CCP's
+    # pacing already *feels* queueing through the inflated ``tr_ok`` — these
+    # fields let a policy tell contention apart from slow compute.
+    queue_delay: Optional[jnp.ndarray] = None  # (N,) f32 cross-tenant wait
+    contention: Optional[jnp.ndarray] = None   # (N,) i32 tenants this round
 
 
 class Policy:
@@ -135,9 +154,28 @@ class Policy:
     #: True -> the engine runs the incremental peeling decoder in the scan
     #: and populates StepCtx.decoded_count/ripple/decode_done (module doc).
     uses_decoder: bool = False
+    #: Fleet-run aux layout: "shared" (one ``prepare`` aux for every
+    #: tenant — rateless policies adapt to whatever streams are open) or
+    #: "per_task" (``prepare_fleet`` builds one aux per tenant so
+    #: fixed-allocation block policies see their recruit set; see
+    #: docs/fleet.md).  Incompatible with ``uses_decoder``.
+    fleet_aux: str = "shared"
 
     def prepare(self, cfg, R: int, ccp_cfg, mu, a, rate) -> dict:
         return {}
+
+    def prepare_fleet(self, cfg, R: int, ccp_cfg, mu, a, rate, recruit):
+        """Per-tenant aux for ``Engine.run_fleet`` (only called when
+        ``fleet_aux == "per_task"``): stacks one :meth:`prepare` aux per
+        task, with non-recruited helpers' mu zeroed so every
+        weight-proportional block allocation lands on the task's actual
+        recruit set (1/E[beta] and mu weights both vanish at mu=0)."""
+        import jax  # local: base.py is otherwise jnp-only
+
+        return jax.vmap(
+            lambda r: self.prepare(
+                cfg, R, ccp_cfg, jnp.where(r, mu, 0.0), a, rate)
+        )(recruit)
 
     def init(self, n: int):
         return {}

@@ -35,7 +35,11 @@ def u_star(mu_a):
     def body(_, u):
         f = jnp.log1p(u + mu_a) - u
         fp = 1.0 / (1.0 + u + mu_a) - 1.0
-        u_new = u - f / fp
+        # fp underflows to exactly 0 in f32 once u + mu_a < ~1e-7 — the
+        # mu = 0 masked-helper lane of a fleet allocation — and f is 0
+        # there too: hold the fixed point instead of dividing 0/0.
+        fp_safe = jnp.where(fp < 0, fp, -1.0)
+        u_new = jnp.where(fp < 0, u - f / fp_safe, u)
         return jnp.where(u_new <= 0, u / 2.0, u_new)
 
     return jax.lax.fori_loop(0, 64, body, jnp.maximum(mu_a, 1.0))

@@ -60,6 +60,10 @@ class UncodedPolicy(Policy):
     version = 1
     m_cap_factor = 4
     report_aux = ("loads",)
+    # Fixed pre-assigned blocks must be allocated over each tenant's
+    # recruited helpers, not the whole pool: a block stranded on a
+    # non-recruited (stopped) stream would make the task unfinishable.
+    fleet_aux = "per_task"
 
     @property
     def name(self) -> str:

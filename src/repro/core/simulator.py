@@ -124,7 +124,10 @@ __all__ = [
     "ScenarioConfig",
     "draw_helpers",
     "draw_packet_tables",
+    "draw_packet_tables_fleet",
     "draw_dynamics",
+    "draw_dynamics_fleet",
+    "fleet_task_keys",
     "class_weights",
     "completion_time",
     "efficiency_measured",
@@ -335,6 +338,45 @@ def draw_packet_tables(key, cfg: ScenarioConfig, mu, a, rate, M: int, R: int):
     d_ack = c.Back / dn
     d_down = c.Br / dn
     return beta, d_up, d_ack, d_down
+
+
+def fleet_task_keys(key, n_tasks: int):
+    """(T, 2) per-task sub-keys with task 0 = ``key`` itself, so a 1-task
+    fleet draws bit-for-bit the single-task tables (the equivalence spine
+    of ``Engine.run_fleet``); extra tenants fold their task index into the
+    same root key."""
+    if n_tasks == 1:
+        return key[None]
+    extra = jnp.stack([jax.random.fold_in(key, 0x7A50 + t)
+                       for t in range(1, n_tasks)])
+    return jnp.concatenate([key[None], extra])
+
+
+def draw_packet_tables_fleet(key, cfg: ScenarioConfig, mu, a, rate,
+                             n_tasks: int, M: int, R: int):
+    """Per-tenant packet tables, each (T, N, M).  Tenants share the helper
+    draw (mu/a/rate — the fleet contends for ONE pool) but draw independent
+    per-packet link/compute randomness."""
+    ks = fleet_task_keys(key, n_tasks)
+    return jax.vmap(
+        lambda k: draw_packet_tables(k, cfg, mu, a, rate, M, R))(ks)
+
+
+def draw_dynamics_fleet(key, cfg: ScenarioConfig, M: int, n_tasks: int):
+    """Fleet churn tables: the *helper-state* processes (outage phases or
+    intervals, slowdown phases, cell events, the Gilbert–Elliott chain
+    state/transition draws) are drawn once and shared across tenants — a
+    helper that is down is down for everyone — while the *per-packet*
+    draws (``drop``, ``ge_u_loss``) gain a leading task axis (T, N, M),
+    since tenants send distinct packets.  Task 0 reuses the single-task
+    :func:`draw_dynamics` output bit-for-bit."""
+    ks = fleet_task_keys(key, n_tasks)
+    per = jax.vmap(lambda k: draw_dynamics(k, cfg, M))(ks)
+    dyn = {k: v[0] for k, v in per.items()}
+    dyn["drop"] = per["drop"]
+    if "ge_u_loss" in per:
+        dyn["ge_u_loss"] = per["ge_u_loss"]
+    return dyn
 
 
 def _draw_durations(key, ch: ChurnConfig, shape):

@@ -79,3 +79,39 @@ def test_run_smoke_fig_churn(tmp_path):
         assert ov["frac_mean"] >= 0.0, r
         assert r["counter_gap"] > 0.0
         assert "soliton_failure" in r and "offline" in r
+
+
+def test_run_smoke_fig_fleet(tmp_path):
+    """The fleet saturation sweep runs end-to-end in the smoke lane and
+    its artifact carries the fleet meta (policy versions + discipline).
+    The physics anchor: at the saturation knee (offered load >= 1) the
+    queue-aware CCP must beat the static-timer Naive on p50 sojourn."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["BENCH_OUT_DIR"] = str(tmp_path)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke",
+         "--only", "fig_fleet"],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1800,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert any(l.startswith("fig_fleet,") for l in proc.stdout.splitlines())
+
+    doc = json.loads((tmp_path / "fig_fleet.json").read_text())
+    assert doc["meta"]["key_schedule"] == "fold_in"
+    assert doc["meta"]["discipline"] == "fifo"
+    assert set(doc["meta"]["policy"]) == {"ccp", "naive"}
+    rows = doc["data"]
+    assert [r["n_tasks"] for r in rows] == [1, 4]
+    for r in rows:
+        for pol in ("ccp", "naive"):
+            assert r[pol]["p99"] >= r[pol]["p50"] > 0, (pol, r)
+            assert 0 <= r[pol]["util_mean"] <= 1 + 1e-6
+    # saturation bites: packing 4 tenants onto 10 helpers (12/10 offered)
+    # must cost p50 sojourn vs the lone-tenant row, for every policy
+    lone, knee = rows[0], rows[-1]
+    assert knee["offered"] >= 1.0
+    for pol in ("ccp", "naive"):
+        assert knee[pol]["p50"] > lone[pol]["p50"], pol
+    # the adaptivity anchor at the knee: TTI feedback sees queueing
+    assert knee["ccp"]["p50"] < knee["naive"]["p50"], knee

@@ -1,0 +1,440 @@
+"""Fleet-engine tests: the equivalence spine, queue laws, admission, and
+the contention observables.
+
+The load-bearing guarantee of PR 7 is the *equivalence spine*: a 1-task
+fleet with the full dedicated pool IS the single-task engine, bit for
+bit, for every registered policy — including the decoder-in-the-loop and
+churn paths.  Everything else (disciplines, placements, metrics) is
+pinned by construction laws:
+
+  * work conservation — ``busy_end - busy == served demand + idle`` on
+    every helper under every discipline;
+  * single-job reduction — each discipline collapses to the dedicated
+    recurrence ``start = max(arrive, busy)``, bitwise;
+  * the golden files of PR 3 pin ``run_fleet`` transitively through the
+    spine (re-checked here directly against tests/golden/).
+"""
+
+import json
+import pathlib
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, fleet, policies, simulator
+from repro.core.policies.ccp import CCPPolicy
+
+ENG = engine.Engine()
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "policy_equivalence.json")
+    .read_text()
+)
+
+CHURN = simulator.ChurnConfig(
+    period=5.0, p_down=0.15, p_slow=0.25, drop_prob=0.05,
+    ge_p_bad=0.03, ge_p_good=0.25, ge_loss_bad=0.5,
+    p_cell=0.05, cell_frac=0.5, max_backoff=8.0)
+
+# Fields whose single-task and task-0-of-fleet values must agree bitwise.
+SPINE_FIELDS = ("T", "efficiency", "r_n", "valid", "max_backoff",
+                "lost_frac")
+
+
+def _bitwise(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return np.array_equal(a, b, equal_nan=True)
+    return np.array_equal(a, b)
+
+
+def _task0(single, fleet_res, field):
+    a = np.asarray(single[field])
+    b = np.asarray(fleet_res[field])
+    return a, (b[:, 0] if b.ndim > a.ndim else b)
+
+
+# ---------------------------------------------------------------------------
+# The equivalence spine: fleet at n_tasks=1 == Engine.run, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet
+@pytest.mark.parametrize("name", sorted(policies.names()))
+def test_fleet_m1_equals_single_task_static(name):
+    cfg = simulator.ScenarioConfig(N=8, scenario=1)
+    keys = simulator.batch_keys(3)
+    res1 = ENG.run(cfg, name, keys, 40)
+    resf = ENG.run_fleet(cfg, name, keys, 40)
+    assert resf.M == res1.M
+    for f in SPINE_FIELDS:
+        a, b = _task0(res1, resf, f)
+        assert _bitwise(a, b), (name, f)
+    # fleet bookkeeping at M=1: zero wait, perfectly fair by definition
+    assert _bitwise(resf.sojourn, resf.T)
+    assert np.asarray(resf.release).max() == 0.0
+    fair = np.asarray(resf.fairness)
+    assert np.allclose(fair[np.isfinite(fair)], 1.0)
+
+
+@pytest.mark.fleet
+@pytest.mark.parametrize(
+    "name", ["ccp", "adaptive_rate_fb", "rateless_ccp", "hcmm",
+             "naive_oracle"])
+def test_fleet_m1_equals_single_task_churn(name):
+    """The churn path adds the GE chain, phase outages, cell events and
+    the timeout/backoff hooks — all shared step kernels; the spine must
+    hold there too (decoder feedback included via rateless/adaptive_fb)."""
+    cfg = simulator.ScenarioConfig(N=8, scenario=1, churn=CHURN)
+    keys = simulator.batch_keys(3)
+    res1 = ENG.run(cfg, name, keys, 40)
+    resf = ENG.run_fleet(cfg, name, keys, 40)
+    for f in SPINE_FIELDS:
+        a, b = _task0(res1, resf, f)
+        assert _bitwise(a, b), (name, f)
+
+
+@pytest.mark.fleet
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_fleet_m1_matches_pre_redesign_golden(name):
+    """run_fleet reproduces the PR-3 goldens directly (not just through
+    Engine.run): the event-clock refactor did not move the physics."""
+    g = GOLDEN[name]
+    if name.startswith("static_sc1"):
+        cfg, mode = (simulator.ScenarioConfig(N=20, scenario=1),
+                     name.split("_")[-1])
+    elif name.startswith("static_sc2"):
+        cfg, mode = simulator.ScenarioConfig(N=20, scenario=2), "ccp"
+    else:
+        ch = simulator.ChurnConfig(
+            period=5.0, p_down=0.1, p_slow=0.2, drop_prob=0.05,
+            ge_p_bad=0.02, ge_p_good=0.2, ge_loss_bad=0.5,
+            p_cell=0.1, cell_frac=0.5, outage_dist="lognormal",
+            outage_mean=4.0, outage_sigma=0.5, max_backoff=8.0)
+        cfg, mode = (simulator.ScenarioConfig(N=16, scenario=1, churn=ch),
+                     name[len("churn_"):])
+    keys = simulator.batch_keys(g["reps"], seed0=g.get("seed0", 0))
+    res = ENG.run_fleet(cfg, policies.get(mode), keys, g["R"],
+                        M_override=g["M"])
+    assert res.M == g["M"]
+    got = {f: _task0({f: np.asarray(g[f])}, res, f)[1]
+           for f in ("T", "r_n", "efficiency", "valid") if f in g}
+    assert _bitwise(np.float32(np.asarray(g["T"])), np.float32(got["T"]))
+    assert _bitwise(np.asarray(g["r_n"]), got["r_n"])
+    assert _bitwise(np.float32(np.asarray(g["efficiency"])),
+                    np.float32(got["efficiency"]))
+    assert _bitwise(np.asarray(g["valid"]), got["valid"])
+
+
+# ---------------------------------------------------------------------------
+# Queue laws: work conservation + single-job reduction
+# ---------------------------------------------------------------------------
+
+def _random_round(seed, T, N):
+    rng = np.random.default_rng(seed)
+    arrive = jnp.asarray(rng.uniform(0.0, 10.0, (T, N)).astype(np.float32))
+    demand = jnp.asarray(rng.uniform(0.1, 3.0, (T, N)).astype(np.float32))
+    active = jnp.asarray(rng.random((T, N)) < 0.7)
+    busy = jnp.asarray(rng.uniform(0.0, 8.0, (N,)).astype(np.float32))
+    key = jnp.asarray(rng.uniform(0.0, 1.0, (T, N)).astype(np.float32))
+    return arrive, jnp.where(active, demand, 0.0), active, busy, key
+
+
+@pytest.mark.fleet
+@pytest.mark.parametrize("discipline", fleet.DISCIPLINES)
+@pytest.mark.parametrize("seed,T", [(0, 1), (1, 3), (2, 5), (3, 8)])
+def test_serve_round_work_conservation(discipline, seed, T):
+    arrive, demand, active, busy, key = _random_round(seed, T, 6)
+    start, fin, idle, busy_end = fleet.serve_round(
+        arrive, demand, active, busy, key, discipline)
+    start, fin, idle = map(np.asarray, (start, fin, idle))
+    act = np.asarray(active)
+    # the server is never idle with work queued; all demand is served
+    np.testing.assert_allclose(
+        np.asarray(busy_end) - np.asarray(busy),
+        np.asarray(demand).sum(0) + idle.sum(0), rtol=1e-5)
+    # inactive jobs do not exist
+    assert (start[~act] == 0).all() and (fin[~act] == 0).all()
+    assert (idle[~act] == 0).all()
+    # causality: nothing starts before it arrives (or before the carried
+    # busy time frees the server for the non-preemptive disciplines)
+    assert (start[act] >= np.asarray(arrive)[act] - 1e-5).all()
+    if discipline != "ps":
+        np.testing.assert_allclose(
+            fin[act], start[act] + np.asarray(demand)[act], rtol=1e-6)
+    else:
+        assert (fin[act] >= start[act] + np.asarray(demand)[act] - 1e-4).all()
+
+
+@pytest.mark.fleet
+@pytest.mark.parametrize("discipline", fleet.DISCIPLINES)
+def test_serve_round_single_job_reduces_to_dedicated_recurrence(discipline):
+    """The T=1 bitwise reduction behind the equivalence spine."""
+    rng = np.random.default_rng(7)
+    arrive = jnp.asarray(rng.uniform(0, 5, (1, 16)).astype(np.float32))
+    demand = jnp.asarray(rng.uniform(0.1, 2, (1, 16)).astype(np.float32))
+    busy = jnp.asarray(rng.uniform(0, 5, (16,)).astype(np.float32))
+    ones = jnp.ones((1, 16), bool)
+    start, fin, idle, busy_end = fleet.serve_round(
+        arrive, demand, ones, busy, arrive, discipline)
+    want_start = jnp.maximum(arrive[0], busy)
+    assert _bitwise(start[0], want_start)
+    assert _bitwise(fin[0], want_start + demand[0])
+    assert _bitwise(idle[0], jnp.maximum(arrive[0] - busy, 0.0))
+    assert _bitwise(busy_end, want_start + demand[0])
+
+
+@pytest.mark.fleet
+def test_priority_discipline_orders_same_round_jobs():
+    """Two jobs waiting on one busy helper: priority serves the low key
+    first regardless of arrival order; fifo serves the earlier arrival."""
+    arrive = jnp.asarray([[0.0], [0.1]])
+    demand = jnp.asarray([[1.0], [1.0]])
+    active = jnp.ones((2, 1), bool)
+    busy = jnp.asarray([5.0])  # both queued long before the server frees
+    prio = jnp.asarray([[1.0], [0.0]])  # task 1 outranks task 0
+    s_f, *_ = fleet.serve_round(arrive, demand, active, busy, arrive, "fifo")
+    s_p, *_ = fleet.serve_round(arrive, demand, active, busy, prio, "priority")
+    assert float(s_f[0, 0]) < float(s_f[1, 0])
+    assert float(s_p[1, 0]) < float(s_p[0, 0])
+
+
+@pytest.mark.fleet
+def test_ps_stretches_concurrent_jobs():
+    """Two equal jobs entering an idle helper together each see 2x their
+    solo service time under egalitarian sharing."""
+    arrive = jnp.zeros((2, 1))
+    demand = jnp.full((2, 1), 3.0)
+    active = jnp.ones((2, 1), bool)
+    start, fin, idle, busy_end = fleet.serve_round(
+        arrive, demand, active, jnp.zeros(1), arrive, "ps")
+    np.testing.assert_allclose(np.asarray(fin), 6.0, rtol=1e-6)
+    np.testing.assert_allclose(float(busy_end[0]), 6.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Admission / placement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet
+def test_striped_placement_is_disjoint_until_pool_exhausted():
+    cfg = simulator.ScenarioConfig(N=12, scenario=1)
+    fc = fleet.FleetConfig(n_tasks=3, placement="striped",
+                           helpers_per_task=4)
+    mu = jnp.ones(12)
+    recruit, prio = fleet.place(jax.random.PRNGKey(0), fc, cfg, mu, mu, mu)
+    r = np.asarray(recruit)
+    assert r.shape == (3, 12)
+    assert (r.sum(axis=1) == 4).all()
+    assert (r.sum(axis=0) <= 1).all()          # disjoint: 3*4 <= 12
+    assert _bitwise(prio, jnp.arange(3, dtype=jnp.float32))
+
+
+@pytest.mark.fleet
+def test_fastest_placement_targets_highest_service_rate():
+    cfg = simulator.ScenarioConfig(N=6, scenario=1)
+    fc = fleet.FleetConfig(n_tasks=2, placement="fastest",
+                           helpers_per_task=2)
+    mu = jnp.asarray([1.0, 10.0, 1.0, 20.0, 1.0, 1.0])
+    a = jnp.full(6, 0.01)
+    recruit, _ = fleet.place(jax.random.PRNGKey(0), fc, cfg, mu, a, mu)
+    r = np.asarray(recruit)
+    assert (r[0] == r[1]).all()                # shared hot set
+    assert set(np.nonzero(r[0])[0]) == {1, 3}  # the two fast helpers
+
+
+@pytest.mark.fleet
+def test_random_placement_has_exact_recruit_count():
+    cfg = simulator.ScenarioConfig(N=10, scenario=1)
+    fc = fleet.FleetConfig(n_tasks=4, placement="random",
+                           helpers_per_task=3)
+    mu = jnp.ones(10)
+    recruit, _ = fleet.place(jax.random.PRNGKey(1), fc, cfg, mu, mu, mu)
+    assert (np.asarray(recruit).sum(axis=1) == 3).all()
+
+
+@pytest.mark.fleet
+def test_block_policies_reallocate_over_recruit_set():
+    """Fixed-allocation block policies (fleet_aux='per_task') must land
+    their whole load on each tenant's recruited helpers — a block stranded
+    on a stopped stream would make the task structurally unfinishable."""
+    cfg = simulator.ScenarioConfig(N=12, scenario=1)
+    mu, a, rate = simulator.draw_helpers(jax.random.PRNGKey(3), cfg)
+    recruit = jnp.stack([jnp.arange(12) < 4, jnp.arange(12) >= 8])
+    for name in ("hcmm", "uncoded_mean", "uncoded_mu"):
+        pol = policies.get(name)
+        aux = pol.prepare_fleet(cfg, 100, cfg.ccp_cfg(100), mu, a, rate,
+                                recruit)
+        loads = np.asarray(aux["loads"])
+        assert loads.shape == (2, 12), name
+        assert (loads[~np.asarray(recruit)] == 0).all(), name
+        assert (loads.sum(axis=1) >= 100).all(), (name, loads)
+    # end-to-end: hcmm under a striped partial recruit actually completes
+    fc = fleet.FleetConfig(n_tasks=3, placement="striped",
+                           helpers_per_task=4)
+    res = ENG.run_fleet(cfg, "hcmm", simulator.batch_keys(2), 120, fleet=fc)
+    assert np.asarray(res.valid).all()
+    assert np.isfinite(np.asarray(res.sojourn)).all()
+
+
+@pytest.mark.fleet
+def test_register_placement_round_trips():
+    @fleet.register_placement("_test_rule")
+    def _rule(key, fc, cfg, mu, a, rate):
+        return jnp.ones((fc.n_tasks, cfg.N), bool)
+
+    try:
+        cfg = simulator.ScenarioConfig(N=4, scenario=1)
+        fc = fleet.FleetConfig(n_tasks=2, placement="_test_rule")
+        mu = jnp.ones(4)
+        recruit, _ = fleet.place(jax.random.PRNGKey(0), fc, cfg, mu, mu, mu)
+        assert np.asarray(recruit).all()
+    finally:
+        del fleet.PLACEMENTS["_test_rule"]
+
+
+@pytest.mark.fleet
+def test_release_processes():
+    k = jax.random.PRNGKey(0)
+    assert (np.asarray(fleet.draw_releases(
+        k, fleet.FleetConfig(n_tasks=4))) == 0).all()
+    uni = np.asarray(fleet.draw_releases(
+        k, fleet.FleetConfig(n_tasks=4, arrival="uniform", load=2.0)))
+    np.testing.assert_allclose(uni, [0.0, 0.5, 1.0, 1.5])
+    poi = np.asarray(fleet.draw_releases(
+        k, fleet.FleetConfig(n_tasks=5, arrival="poisson", load=1.0)))
+    assert poi[0] == 0.0 and (np.diff(poi) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Input validation (satellite: actionable Engine.run errors)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad_R", [0, -3, 1.5, True])
+def test_run_rejects_bad_R(bad_R):
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    with pytest.raises((ValueError, TypeError), match="R must be"):
+        ENG.run(cfg, "ccp", simulator.batch_keys(2), bad_R)
+
+
+def test_run_rejects_empty_keys():
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    with pytest.raises(ValueError, match="batch_keys"):
+        ENG.run(cfg, "ccp", jnp.zeros((0, 2), jnp.uint32), 10)
+
+
+def test_run_rejects_unknown_policy_with_known_list():
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    with pytest.raises(ValueError) as e:
+        ENG.run(cfg, "cpp", simulator.batch_keys(2), 10)
+    assert "ccp" in str(e.value)  # the known list is in the message
+
+
+def test_run_rejects_non_policy_object():
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    with pytest.raises(TypeError, match="registry name or a Policy"):
+        ENG.run(cfg, 42, simulator.batch_keys(2), 10)
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="discipline"):
+        fleet.FleetConfig(discipline="lifo")
+    with pytest.raises(ValueError, match="arrival"):
+        fleet.FleetConfig(arrival="bursty")
+    with pytest.raises(ValueError, match="load"):
+        fleet.FleetConfig(arrival="poisson")
+    with pytest.raises(ValueError, match="n_tasks"):
+        fleet.FleetConfig(n_tasks=0)
+    with pytest.raises(ValueError, match="priority"):
+        fleet.FleetConfig(n_tasks=2, priority=(1.0,))
+    with pytest.raises(ValueError, match="placement"):
+        cfg = simulator.ScenarioConfig(N=4, scenario=1)
+        fc = fleet.FleetConfig(placement="nearest")
+        fleet.place(jax.random.PRNGKey(0), fc, cfg,
+                    jnp.ones(4), jnp.ones(4), jnp.ones(4))
+    with pytest.raises(ValueError, match="discipline"):
+        z = jnp.zeros((1, 2))
+        fleet.serve_round(z, z, z > 0, jnp.zeros(2), z, "lifo")
+
+
+# ---------------------------------------------------------------------------
+# Contention observables reach the policy hooks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ProbeCCP(CCPPolicy):
+    """ccp plus a recorder: folds the queue-delay / contention fields of
+    StepCtx into the policy state, proving the observables reach the
+    hooks (and flow out through RunResult extras)."""
+
+    name = "_probe_ccp"
+
+    def init(self, n):
+        return dict(super().init(n),
+                    probe_qd=jnp.zeros(n), probe_ct=jnp.zeros(n))
+
+    def on_computed(self, state, ctx):
+        state = super().on_computed(state, ctx)
+        qd = ctx.queue_delay if ctx.queue_delay is not None else 0.0
+        ct = ctx.contention if ctx.contention is not None else 0.0
+        return dict(state,
+                    probe_qd=jnp.maximum(state["probe_qd"], qd),
+                    probe_ct=jnp.maximum(state["probe_ct"], ct))
+
+    def summary(self, state):
+        return dict(super().summary(state),
+                    probe_qd=state["probe_qd"].max(),
+                    probe_ct=state["probe_ct"].max())
+
+
+@pytest.mark.fleet
+def test_fleet_exposes_queue_delay_and_contention_to_hooks():
+    cfg = simulator.ScenarioConfig(N=6, scenario=1)
+    fc = fleet.FleetConfig(n_tasks=3, discipline="fifo", placement="all")
+    res = ENG.run_fleet(cfg, _ProbeCCP(), simulator.batch_keys(2), 30,
+                        fleet=fc)
+    # 3 tenants all recruiting all 6 helpers: round 0 alone queues 3 jobs
+    # on every helper, so both observables must be strictly positive.
+    assert np.asarray(res.extras["probe_ct"]).max() >= 2
+    assert np.asarray(res.extras["probe_qd"]).max() > 0
+    # and the single-task engine leaves them at their None defaults
+    res1 = ENG.run(cfg, _ProbeCCP(), simulator.batch_keys(2), 30)
+    assert np.asarray(res1.extras["probe_qd"]).max() == 0
+
+
+# ---------------------------------------------------------------------------
+# Fleet behaviour under load
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet
+def test_contention_degrades_completion_time():
+    """4 tenants sharing the full pool must finish (p50 sojourn) no
+    faster than a lone tenant on the same pool — and the load must
+    actually bite (strictly slower)."""
+    cfg = simulator.ScenarioConfig(N=6, scenario=1)
+    keys = simulator.batch_keys(3)
+    lone = ENG.run_fleet(cfg, "ccp", keys, 40)
+    packed = ENG.run_fleet(cfg, "ccp", keys, 40,
+                           fleet=fleet.FleetConfig(n_tasks=4))
+    assert packed.summary()["p50"] > lone.summary()["p50"] * 1.2
+    # shared pool, equal tenants: fairness stays high
+    assert np.nanmean(np.asarray(packed.fairness)) > 0.5
+
+
+@pytest.mark.fleet
+def test_fleet_metrics_shapes_and_ranges():
+    cfg = simulator.ScenarioConfig(N=6, scenario=1)
+    fc = fleet.FleetConfig(n_tasks=3, discipline="ps", placement="striped",
+                           helpers_per_task=3)
+    res = ENG.run_fleet(cfg, "ccp", simulator.batch_keys(2), 30, fleet=fc)
+    assert res.n_tasks == 3 and res.discipline == "ps"
+    assert res.T.shape == (2, 3)
+    assert res.util.shape == (2, 6)
+    u = np.asarray(res.util)
+    assert (u >= 0).all() and (u <= 1.0 + 1e-5).all()
+    f = np.asarray(res.fairness)
+    assert ((f > 1 / 3 - 1e-6) & (f <= 1 + 1e-6))[np.isfinite(f)].all()
+    s = res.summary()
+    assert s["p99"] >= s["p50"] > 0
