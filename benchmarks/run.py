@@ -13,6 +13,9 @@ simulation benchmarks whose deliverable is the derived statistics).
   fig_fleet   — multi-tenant saturation sweep: p50/p99 sojourn, helper
                 utilization and Jain fairness vs offered load
                 (beyond-paper, PR-7 fleet engine)
+  fig_transport — delay/efficiency vs mean feedback RTT across iid/burst/
+                cell churn; the price of delayed ACK/NACK observation
+                (beyond-paper, PR-8 transport layer)
   efficiency  — measured vs eq.(12) efficiency (paper §6 table)
   overhead    — fountain codec failure prob + O(R) timing (paper §2 claims)
   kernel      — Pallas hot-spot roofline accounting + batched-MC speedup
@@ -63,7 +66,8 @@ def main(argv=None) -> None:
     from repro.core import policies as policy_registry
 
     from . import (efficiency, fig3, fig4, fig5, fig_churn, fig_decode,
-                   fig_fleet, kernel_bench, overhead, roofline_report)
+                   fig_fleet, fig_transport, kernel_bench, overhead,
+                   roofline_report)
 
     reps_explicit = args.reps is not None
     reps = args.reps if reps_explicit else (
@@ -91,6 +95,7 @@ def main(argv=None) -> None:
                          offline_trials=2)
         fleet_kw = dict(task_sweep=(1, 4), R=120, n_helpers=10,
                         helpers_per_task=3, policies=("ccp", "naive"))
+        transport_kw = dict(rtt_sweep=(0.0, 4.0), R=200, n_helpers=16)
     elif args.fast:
         sweep = (500, 1000)
         churn_kw = dict(
@@ -100,11 +105,13 @@ def main(argv=None) -> None:
         decode_kw = dict(sweep=(0.0, 0.2), offline_trials=4)
         fleet_kw = dict(task_sweep=(1, 4, 8), R=200, n_helpers=12,
                         helpers_per_task=4)
+        transport_kw = dict(rtt_sweep=(0.0, 1.0, 4.0), R=400, n_helpers=25)
     else:
         sweep = (1000, 2000, 4000, 8000)
         churn_kw = {}
         decode_kw = {}
         fleet_kw = {}
+        transport_kw = {}
     small = args.fast or args.smoke
     # An explicit --reps is honored verbatim everywhere; the per-figure
     # scaling below only applies to the lane defaults.
@@ -124,6 +131,9 @@ def main(argv=None) -> None:
         "fig_decode": lambda: fig_decode.run(reps=reps, shard=shard,
                                              **decode_kw),
         "fig_fleet": lambda: fig_fleet.run(reps=reps, **fleet_kw),
+        "fig_transport": lambda: fig_transport.run(reps=reps, shard=shard,
+                                                   **fig_policies,
+                                                   **transport_kw),
         "efficiency": lambda: efficiency.run(
             reps=eff_reps,
             R=400 if args.smoke else (2000 if args.fast else 8000),

@@ -48,6 +48,7 @@ from . import ccp as ccp_mod
 from . import decode as decode_mod
 from . import policies as policies_mod
 from . import simulator as sim
+from . import transport as transport_mod
 
 __all__ = ["Engine", "RunResult", "FleetRunResult", "policy_stream"]
 
@@ -102,15 +103,20 @@ def _check_inputs(keys, R):
 # ---------------------------------------------------------------------------
 
 def _parse_churn_static(churn_static):
-    """Unpack ``ChurnConfig.static_key()`` or the legacy 2-tuple (phase
-    outages only) used by direct ``policy_stream`` callers."""
+    """Unpack ``ChurnConfig.static_key()`` — the current 6-tuple, the
+    pre-transport 5-tuple, or the legacy 2-tuple (phase outages only)
+    used by direct ``policy_stream`` callers."""
     ge_on = cell_on = False
     outage_dist = "phase"
+    rtt_dist = "off"
     if len(churn_static) == 2:
         period, max_backoff = churn_static
-    else:
+    elif len(churn_static) == 5:
         period, max_backoff, outage_dist, ge_on, cell_on = churn_static
-    return period, max_backoff, outage_dist, ge_on, cell_on
+    else:
+        (period, max_backoff, outage_dist, ge_on, cell_on,
+         rtt_dist) = churn_static
+    return period, max_backoff, outage_dist, ge_on, cell_on, rtt_dist
 
 
 def _churn_step(dyn, a, beta_x, drop, t_arr, t_sta, sent, *, period, window,
@@ -154,6 +160,17 @@ def _ge_step(bad, ge_params, u_trans, u_loss, sent):
     lost = (u_loss < jnp.where(bad, l_bad, l_good)) & sent
     bad_next = jnp.where(bad, u_trans >= p_good, u_trans < p_bad)
     return lost, bad_next
+
+
+def _transport_step(dyn, x, ge_bad):
+    """Observation delay of this step's feedback (transport layer on):
+    the sampled feedback RTT, doubled when the ACK is lost — composed
+    with the same GE chain state that governs this step's data loss.
+    ``ge_bad`` is None when the GE chain is off.  Broadcasts over a
+    leading tenant axis in ``x`` (the fleet scan)."""
+    return transport_mod.observation_delay(
+        dyn["rtt_base"] * x["rtt_jit"], x["ack_u"], dyn["ack_p_drop"],
+        ge_bad=ge_bad, ge_params=dyn.get("ge_params"))
 
 
 def _send_time_ids(sym_next, tx, sent):
@@ -212,11 +229,17 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
 
     cfg_static: hashable (Bx, Br, Back, alpha) tuple.
     churn_static: ``ChurnConfig.static_key()`` — hashable (period,
-        max_backoff, outage_dist, ge_enabled, cell_enabled) — or the
-        legacy (period, max_backoff) 2-tuple (phase outages only), or
-        None for the static paper model.  When set, ``dyn`` (from
+        max_backoff, outage_dist, ge_enabled, cell_enabled, rtt_dist) —
+        or the pre-transport 5-tuple / legacy (period, max_backoff)
+        2-tuple (phase outages only), or None for the static paper
+        model.  When set, ``dyn`` (from
         :func:`repro.core.simulator.draw_dynamics`) and ``a`` (N,)
-        runtime offsets must be provided.
+        runtime offsets must be provided.  A ``rtt_dist != 'off'``
+        switches on the transport feedback-delay line: the policy hooks
+        then see *observed* instants (``ctx.tr_ok`` / ``ctx.rtt_ack`` /
+        ``ctx.tr_prev`` shifted by the sampled feedback delay, and
+        ``decode_t_done`` as a master-observed bound) while the returned
+        trace stays physical (docs/transport.md).
     aux: ``policy.prepare()`` output (per-rep traced pytree).
     """
     Bx, Br, Back, alpha = cfg_static
@@ -226,11 +249,13 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
     churn = churn_static is not None
     ge_on = cell_on = False
     outage_dist = "phase"
+    rtt_dist = "off"
     max_backoff = None
     if churn:
         (period, max_backoff, outage_dist, ge_on,
-         cell_on) = _parse_churn_static(churn_static)
+         cell_on, rtt_dist) = _parse_churn_static(churn_static)
         window = period * dyn["speed"].shape[1]
+    rtt_on = rtt_dist != "off"
 
     use_dec = bool(policy.uses_decoder)
     carry0 = dict(
@@ -256,6 +281,9 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
         carry0["ge_bad"] = dyn["ge_bad0"]
         xs["ge_u_trans"] = dyn["ge_u_trans"].T
         xs["ge_u_loss"] = dyn["ge_u_loss"].T
+    if rtt_on:
+        xs["rtt_jit"] = dyn["rtt_jit"].T
+        xs["ack_u"] = dyn["ack_u"].T
 
     def step(carry, x):
         tx = carry["tx"]
@@ -294,6 +322,19 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
         )
         rtt_ack = x["d_up"] + x["d_ack"]
 
+        # Transport delay line (docs/transport.md): the physics above is
+        # final — what follows (decoder absorb, policy hooks) runs on the
+        # *observed* instants, one feedback RTT late (two when the ACK was
+        # lost and NACK-retransmitted).  At rtt_mean = 0 the delay is
+        # exactly 0.0, so the enabled path is bitwise the idealized scan.
+        if rtt_on:
+            obs_delay = _transport_step(
+                dyn, x, carry["ge_bad"] if ge_on else None)
+            tr_obs = tr_ok + obs_delay
+            rtt_obs = rtt_ack + obs_delay
+        else:
+            tr_obs, rtt_obs = tr_ok, rtt_ack
+
         if use_dec:
             # Absorb this step's result arrivals into the peeling decoder
             # before the hooks run: the feedback a policy sees at step i is
@@ -302,9 +343,13 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
             # Fresh coded ids are handed out in send-time order, so early
             # (systematic) ids go to the helpers that actually send early.
             ids, sym_next = _send_time_ids(carry["sym_next"], tx, sent)
+            # tr_obs, not tr_ok: decode_t_done is the master-*observed*
+            # bound — the instant the controller can know the collector
+            # holds a decodable set, which under transport lags the
+            # physical decode by the feedback delay of the closing packet.
             dec, t_hi, t_done = _decode_step(
                 carry["dec"], carry["dec_t_hi"], carry["dec_t_done"],
-                aux["decoder"]["tables"], ids, received, tr_ok,
+                aux["decoder"]["tables"], ids, received, tr_obs,
             )
             dec_kw = dict(decoded_count=dec["count"], ripple=dec["ripple"],
                           decode_done=dec["done"], decode_t_done=t_done)
@@ -314,7 +359,7 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
 
         ctx = policies_mod.StepCtx(
             i=x["i"], n=N, tx=tx, arrive=arrive, start=start, beta=beta_i,
-            tr_ok=tr_ok, lost=lost, received=received, rtt_ack=rtt_ack,
+            tr_ok=tr_obs, lost=lost, received=received, rtt_ack=rtt_obs,
             d_up=x["d_up"], d_down=x["d_down"], d_ack=x["d_ack"],
             tr_prev=carry["tr_prev"], cfg=cfg, max_backoff=max_backoff,
             aux=aux, **dec_kw,
@@ -323,7 +368,7 @@ def policy_stream(beta, d_up, d_ack, d_down, policy, cfg_static,
 
         new_carry = dict(
             tx=tx_next, done_prev=done,
-            tr_prev=jnp.where(received, tr_ok, carry["tr_prev"]),
+            tr_prev=jnp.where(received, tr_obs, carry["tr_prev"]),
             pstate=pstate,
         )
         if ge_on:
@@ -568,6 +613,43 @@ def _sim_batch_sharded(keys, cfg, R: int, M: int, policy, devices=None):
     return {k: v[:B] for k, v in out.items()}
 
 
+@functools.lru_cache(maxsize=None)
+def _fleet_sharded_batch_fn(cfg, R: int, M: int, policy, fleet, devs: tuple,
+                            batch: int):
+    """Fleet twin of :func:`_sharded_batch_fn`: the key batch splits over
+    the same 1-D 'data' mesh and each device vmaps its shard through
+    ``_fleet_one``.  Reps are independent (every tenant of a rep lives on
+    that rep's device), so there are no collectives and the sharded run
+    is bitwise the single-device ``_fleet_batch_jit`` vmap."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from ..parallel import sharding as shd
+
+    mesh = shd.data_mesh(devs)
+    spec = shd.batch_spec(mesh, batch, extra_dims=1)
+    body = lambda k: jax.vmap(
+        lambda kk: _fleet_one(kk, cfg, R, M, policy, fleet))(k)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,),
+                   out_specs=PartitionSpec("data"), check_rep=False)
+    return jax.jit(fn)
+
+
+def _fleet_batch_sharded(keys, cfg, R: int, M: int, policy, fleet,
+                         devices=None):
+    """Device-sharded fleet batch (pad-to-device-multiple, as in
+    :func:`_sim_batch_sharded`)."""
+    devs = tuple(devices) if devices is not None else tuple(jax.local_devices())
+    B = keys.shape[0]
+    pad = (-B) % len(devs)
+    keys_p = keys if pad == 0 else jnp.concatenate(
+        [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])]
+    )
+    out = _fleet_sharded_batch_fn(
+        cfg, R, M, policy, fleet, devs, keys_p.shape[0])(keys_p)
+    return {k: v[:B] for k, v in out.items()}
+
+
 def _m_cap(cfg, kk: int, policy) -> int:
     # Static: every helper streams back-to-back, so M = R+K always
     # certifies.  Under churn a helper's M packets can include losses;
@@ -767,7 +849,9 @@ class Engine:
         return RunResult(M=M, policy=policy.name, extras=extras, **core)
 
     def run_fleet(self, cfg, policy, keys, R: int, *, fleet=None,
-                  M_override: Optional[int] = None) -> FleetRunResult:
+                  M_override: Optional[int] = None,
+                  shard: Optional[bool] = None,
+                  devices=None) -> FleetRunResult:
         """Multi-tenant event-clock run: ``fleet.n_tasks`` concurrent tasks
         contend for the ``cfg.N`` shared helpers under the configured
         service discipline and admission rule (see docs/fleet.md).
@@ -779,18 +863,44 @@ class Engine:
         tests in ``tests/test_fleet.py`` pin this against the goldens.
         Certification works as in :meth:`run`: the shared horizon doubles
         until every (rep, task) completion is certified or the cap is hit.
+        With ``shard=True`` (or an ``Engine(shard=True)``) the key batch
+        splits over the local 'data' mesh exactly as in :meth:`run`, and
+        the sharded results are bitwise the vmap path's.
         """
         from . import fleet as fleet_mod
 
         policy = _as_policy(policy)
+        shard = self.shard if shard is None else shard
+        devices = self.devices if devices is None else devices
         fleet = fleet_mod.FleetConfig() if fleet is None else fleet
+        if not isinstance(fleet, fleet_mod.FleetConfig):
+            raise TypeError(
+                "fleet must be a repro.core.fleet.FleetConfig (or None for "
+                f"the 1-task default), got {type(fleet).__name__}: {fleet!r}"
+            )
+        if fleet.placement not in fleet_mod.PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {fleet.placement!r}; known: "
+                f"{sorted(fleet_mod.PLACEMENTS)} (register_placement adds "
+                "custom rules)"
+            )
+        if (fleet.helpers_per_task is not None
+                and fleet.helpers_per_task > cfg.N):
+            raise ValueError(
+                f"helpers_per_task={fleet.helpers_per_task} exceeds the "
+                f"cfg.N={cfg.N} helpers in the pool"
+            )
         keys = _check_inputs(keys, R)
         kk = R + cfg.K(R)
         cap = _m_cap(cfg, kk, policy)
         M = _initial_m(sim._horizon_shared(cfg, R), cfg, R, kk, cap, policy,
                        M_override)
         for _ in range(8):
-            out = _fleet_batch_jit(keys, cfg, R, M, policy, fleet)
+            if shard:
+                out = _fleet_batch_sharded(
+                    keys, cfg, R, M, policy, fleet, devices)
+            else:
+                out = _fleet_batch_jit(keys, cfg, R, M, policy, fleet)
             if bool(out["valid"].all()) or M >= cap or M_override is not None:
                 break
             M = min(M * 2, cap)

@@ -91,11 +91,13 @@ def fleet_stream(beta, d_up, d_ack, d_down, release, recruit, prio, policy,
     churn = churn_static is not None
     ge_on = cell_on = False
     outage_dist = "phase"
+    rtt_dist = "off"
     max_backoff = None
     if churn:
         (period, max_backoff, outage_dist, ge_on,
-         cell_on) = engine._parse_churn_static(churn_static)
+         cell_on, rtt_dist) = engine._parse_churn_static(churn_static)
         window = period * dyn["speed"].shape[1]
+    rtt_on = rtt_dist != "off"
     use_dec = bool(policy.uses_decoder)
     if use_dec and aux_task_axis:
         raise NotImplementedError(
@@ -127,6 +129,9 @@ def fleet_stream(beta, d_up, d_ack, d_down, release, recruit, prio, policy,
         carry0["ge_bad"] = dyn["ge_bad0"]          # one chain per helper
         xs["ge_u_trans"] = dyn["ge_u_trans"].T     # (M, N) shared advance
         xs["ge_u_loss"] = mv(dyn["ge_u_loss"])     # (M, T, N) per tenant
+    if rtt_on:
+        xs["rtt_jit"] = mv(dyn["rtt_jit"])         # (M, T, N) per tenant
+        xs["ack_u"] = mv(dyn["ack_u"])             # rtt_base stays shared
 
     def step(carry, x):
         tx = carry["tx"]
@@ -172,6 +177,17 @@ def fleet_stream(beta, d_up, d_ack, d_down, release, recruit, prio, policy,
         contention = received.sum(axis=0).astype(jnp.int32)
         rtt_ack = x["d_up"] + x["d_ack"]
 
+        # Transport delay line, exactly as in the single-task scan: the
+        # (T, N) jitter/ACK draws broadcast against the shared (N,)
+        # per-helper base RTT and GE chain state (docs/transport.md).
+        if rtt_on:
+            obs_delay = engine._transport_step(
+                dyn, x, carry["ge_bad"] if ge_on else None)
+            tr_obs = tr_ok + obs_delay
+            rtt_obs = rtt_ack + obs_delay
+        else:
+            tr_obs, rtt_obs = tr_ok, rtt_ack
+
         if use_dec:
             ids, sym_next = jax.vmap(engine._send_time_ids)(
                 carry["sym_next"], tx, sent)
@@ -180,7 +196,7 @@ def fleet_stream(beta, d_up, d_ack, d_down, release, recruit, prio, policy,
                 lambda d, hi, dn, ii, rc, tk: engine._decode_step(
                     d, hi, dn, tables, ii, rc, tk)
             )(carry["dec"], carry["dec_t_hi"], carry["dec_t_done"], ids,
-              received, tr_ok)
+              received, tr_obs)
             dec_kw = dict(decoded_count=dec["count"], ripple=dec["ripple"],
                           decode_done=dec["done"], decode_t_done=t_done)
         else:
@@ -206,13 +222,13 @@ def fleet_stream(beta, d_up, d_ack, d_down, release, recruit, prio, policy,
         pstate, tx_next, b = jax.vmap(
             hooks_one,
             in_axes=(0,) * 14 + (0, aux_ax),
-        )(carry["pstate"], tx, arrive, start, beta_i, tr_ok, lost,
-          received, rtt_ack, x["d_up"], x["d_down"], x["d_ack"],
+        )(carry["pstate"], tx, arrive, start, beta_i, tr_obs, lost,
+          received, rtt_obs, x["d_up"], x["d_down"], x["d_ack"],
           carry["tr_prev"], queue_delay, dec_kw, aux)
 
         new_carry = dict(
             tx=tx_next, busy=busy_next,
-            tr_prev=jnp.where(received, tr_ok, carry["tr_prev"]),
+            tr_prev=jnp.where(received, tr_obs, carry["tr_prev"]),
             pstate=pstate,
         )
         if ge_on:

@@ -11,8 +11,11 @@ Built-ins: ``ccp`` (Algorithm 1), ``best`` (oracle TTI), ``naive`` /
 from the sequential NumPy path into the vmapped scan), ``adaptive_rate``
 (measured-loss code-rate adaptation), ``rateless_ccp`` (decoder-in-the-loop
 completion: the task is done when the LT peeling decode actually succeeds),
-and ``adaptive_rate_fb`` (code-rate adaptation that also stops sending —
-drops the residual K — on ``StepCtx.decode_done``).
+``adaptive_rate_fb`` (code-rate adaptation that also stops sending —
+drops the residual K — on ``StepCtx.decode_done``), and ``tfrc_ccp``
+(RFC 5348 equation-based pacing from a scan-carried loss-event-rate and
+RTT estimator, built for the delayed/lossy feedback channel of
+:mod:`repro.core.transport`).
 
 See ``docs/policies.md`` for the protocol contract and a worked example
 of registering a custom policy.
@@ -22,7 +25,7 @@ from .base import RING, Policy, StepCtx, get, names, register  # noqa: F401
 
 # Importing the modules registers the built-ins.
 from . import (  # noqa: F401, E402
-    adaptive_rate, best, ccp, hcmm, naive, rateless, uncoded,
+    adaptive_rate, best, ccp, hcmm, naive, rateless, tfrc, uncoded,
 )
 from .adaptive_rate import AdaptiveRatePolicy  # noqa: F401
 from .best import BestPolicy  # noqa: F401
@@ -30,10 +33,12 @@ from .ccp import CCPPolicy  # noqa: F401
 from .hcmm import HCMMPolicy  # noqa: F401
 from .naive import NaivePolicy  # noqa: F401
 from .rateless import RatelessCCPPolicy  # noqa: F401
+from .tfrc import TFRCCCPPolicy  # noqa: F401
 from .uncoded import UncodedPolicy  # noqa: F401
 
 __all__ = [
     "RING", "Policy", "StepCtx", "get", "names", "register",
     "CCPPolicy", "BestPolicy", "NaivePolicy", "UncodedPolicy",
     "HCMMPolicy", "AdaptiveRatePolicy", "RatelessCCPPolicy",
+    "TFRCCCPPolicy",
 ]

@@ -106,10 +106,18 @@ class StepCtx:
     arrive: jnp.ndarray     # uplink arrival time
     start: jnp.ndarray      # compute start (FIFO queue)
     beta: jnp.ndarray       # effective runtime (churn-scaled)
-    tr_ok: jnp.ndarray      # would-be result-arrival time if not lost
+    # Observation-delay contract (docs/transport.md): with the transport
+    # layer on (ChurnConfig.rtt_dist != 'off'), tr_ok / rtt_ack / tr_prev
+    # — and the decoder feedback below — are *observed* instants: the
+    # physical event shifted by the sampled feedback delay (one RTT, two
+    # when the ACK was lost and NACK-retransmitted).  Ground truth (the
+    # engine's trace, completion extraction) stays time-exact; a policy
+    # paces on what the controller can actually know.  With transport
+    # off — or rtt_mean = 0 — observed and physical coincide, bit for bit.
+    tr_ok: jnp.ndarray      # (observed) result-arrival time if not lost
     lost: jnp.ndarray       # bool: packet lost (churn)
     received: jnp.ndarray   # bool: ~lost
-    rtt_ack: jnp.ndarray    # measured receipt-ACK RTT sample
+    rtt_ack: jnp.ndarray    # (observed) receipt-ACK RTT sample
     d_up: jnp.ndarray       # uplink delay of packet i
     d_down: jnp.ndarray     # result downlink delay
     d_ack: jnp.ndarray      # ACK downlink delay
@@ -124,7 +132,9 @@ class StepCtx:
     ripple: Optional[jnp.ndarray] = None         # () i32 released this step
     decode_done: Optional[jnp.ndarray] = None    # () bool all R recovered
     # Real-time upper bound on the decode completion instant: the max
-    # arrival time over the absorbed set when decode_done first fired (+inf
+    # *observed* arrival time over the absorbed set when decode_done first
+    # fired — under transport this is the master-observed bound, lagging
+    # the physical decode by the feedback delay of the closing packet (+inf
     # until then).  The scan is step-aligned, not time-aligned — a slow
     # helper's step-s result can arrive *later* than a fast helper's
     # step-s+k one — so a send at tx < decode_t_done may still beat the

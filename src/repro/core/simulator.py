@@ -171,6 +171,21 @@ class ChurnConfig:
     ge_loss_good / ge_loss_bad: per-packet loss prob in each GE state.
     p_cell:     per-phase prob a correlated whole-cell outage event starts.
     cell_frac:  prob each helper belongs to a given cell event.
+    rtt_dist:   feedback-RTT regime of the transport layer
+                (:mod:`repro.core.transport`): 'off' (default — the
+                idealized zero-latency control plane), 'fixed',
+                'lognormal' (jittered) or 'cell' (latency spikes).  When
+                enabled, every StepCtx observation the policy sees is
+                delayed by the sampled feedback RTT (doubled when the ACK
+                itself is lost and NACK-retransmitted) while ground-truth
+                completion stays time-exact; ``rtt_mean = 0`` is
+                bit-for-bit the idealized engine.
+    rtt_mean:   mean feedback RTT in seconds.
+    rtt_sigma:  log-std of the 'lognormal' per-packet jitter.
+    rtt_spike_prob / rtt_spike_scale: 'cell' regime — per-packet prob of a
+                latency spike and its multiplier on the base RTT.
+    rtt_het:    per-helper base-RTT heterogeneity: bases are uniform in
+                ``rtt_mean * [1 - rtt_het, 1 + rtt_het]``.
     """
 
     period: float = 5.0
@@ -189,6 +204,12 @@ class ChurnConfig:
     ge_loss_bad: float | Tuple[float, ...] = 1.0
     p_cell: float = 0.0
     cell_frac: float = 0.5
+    rtt_dist: str = "off"
+    rtt_mean: float = 0.0
+    rtt_sigma: float = 0.5
+    rtt_spike_prob: float = 0.05
+    rtt_spike_scale: float = 10.0
+    rtt_het: float = 0.0
 
     _GE_KNOBS = ("ge_p_bad", "ge_p_good", "ge_loss_good", "ge_loss_bad")
 
@@ -198,6 +219,16 @@ class ChurnConfig:
                 f"outage_dist must be 'phase', 'geometric' or 'lognormal', "
                 f"got {self.outage_dist!r}"
             )
+        from .transport import RTT_DISTS  # local: transport imports nothing back
+        if self.rtt_dist not in RTT_DISTS:
+            raise ValueError(
+                f"rtt_dist must be one of {RTT_DISTS}, got {self.rtt_dist!r}"
+            )
+        if self.rtt_mean < 0.0:
+            raise ValueError(f"rtt_mean must be >= 0, got {self.rtt_mean!r}")
+        if not 0.0 <= self.rtt_het <= 1.0:
+            raise ValueError(
+                f"rtt_het must be in [0, 1], got {self.rtt_het!r}")
         # Normalize list-valued GE knobs to (hashable) tuples and check the
         # per-class lengths agree.
         lengths = set()
@@ -257,17 +288,25 @@ class ChurnConfig:
         return float(np.mean(pb * lb + (1.0 - pb) * lg))
 
     @property
+    def rtt_enabled(self) -> bool:
+        """True when the transport feedback-delay line is structurally on
+        (``rtt_dist != 'off'``); with ``rtt_mean = 0`` the enabled path is
+        still numerically the idealized engine, bit for bit."""
+        return self.rtt_dist != "off"
+
+    @property
     def neutral(self) -> bool:
         return (self.p_down == 0.0 and self.p_slow == 0.0
                 and self.drop_prob == 0.0 and not self.ge_enabled
-                and not self.cell_enabled)
+                and not self.cell_enabled
+                and (not self.rtt_enabled or self.rtt_mean == 0.0))
 
     def static_key(self) -> tuple:
         """Hashable tuple of the *structural* knobs the engine scan
         specializes on (the static ``churn_static`` argument of
         ``engine.policy_stream``)."""
         return (self.period, self.max_backoff, self.outage_dist,
-                self.ge_enabled, self.cell_enabled)
+                self.ge_enabled, self.cell_enabled, self.rtt_dist)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -376,6 +415,12 @@ def draw_dynamics_fleet(key, cfg: ScenarioConfig, M: int, n_tasks: int):
     dyn["drop"] = per["drop"]
     if "ge_u_loss" in per:
         dyn["ge_u_loss"] = per["ge_u_loss"]
+    # Transport: the per-helper base RTT is a helper property (shared, from
+    # task 0 like mu); per-packet jitter and ACK-loss uniforms are per
+    # tenant — tenants send distinct packets over the same control path.
+    for k in ("rtt_jit", "ack_u"):
+        if k in per:
+            dyn[k] = per[k]
     return dyn
 
 
@@ -412,7 +457,10 @@ def draw_dynamics(key, cfg: ScenarioConfig, M: int):
     ``ge_params`` — (4,) scalars, or (4, N) per-helper when any ``ge_*``
     knob is a per-class tuple: each helper draws a class uniformly, so one
     cell can mix fast and slow faders — so sweeping them does not
-    retrace)."""
+    retrace).
+    When the transport layer is on (``rtt_dist != 'off'``):
+    ``rtt_base`` (N,), ``rtt_jit``/``ack_u`` (N, M) and the traced
+    ``ack_p_drop`` scalar (see :mod:`repro.core.transport.rtt`)."""
     ch = cfg.churn
     kd, ku, ks, kdur, kc, kg = jax.random.split(key, 6)
     N, P = cfg.N, ch.n_phases
@@ -462,6 +510,16 @@ def draw_dynamics(key, cfg: ScenarioConfig, M: int):
             dyn["ge_params"] = per  # (4, N)
         dyn["ge_u_trans"] = jax.random.uniform(kt, (N, M))
         dyn["ge_u_loss"] = jax.random.uniform(klo, (N, M))
+    if ch.rtt_enabled:
+        # Transport feedback-delay tables (repro.core.transport): drawn
+        # from a key folded off the dynamics key so enabling the transport
+        # layer never perturbs the churn tables above — the foundation of
+        # the RTT=0 bit-for-bit guarantee.  ``ack_p_drop`` rides along as
+        # a traced scalar so the ACK-loss floor never forces a retrace.
+        from . import transport as transport_mod
+        dyn.update(transport_mod.draw_rtt_tables(
+            jax.random.fold_in(key, 0x577), ch, N, M))
+        dyn["ack_p_drop"] = jnp.float32(ch.drop_prob)
     return dyn
 
 

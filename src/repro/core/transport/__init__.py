@@ -1,0 +1,34 @@
+"""Transport layer: delayed ACK/NACK feedback, RTT processes, TFRC pacing.
+
+The engine's scans idealize the control plane: every ``StepCtx``
+observation (``on_computed`` receipts, ``decoded_count``, ``queue_delay``)
+reaches the pacing controller the instant the underlying event happens.
+This package models the feedback channel between the data collector and
+the controller as a real link: per-helper RTT processes
+(:mod:`.rtt` — fixed / lognormal-jittered / cellular-spike regimes), ACK
+loss composed with the existing Gilbert–Elliott burst chain with a
+NACK-style retransmission round (:mod:`.delay`), and the TFRC (RFC 5348)
+throughput-equation pacing used by the ``tfrc_ccp`` policy
+(:mod:`.tfrc`).
+
+The contract (docs/transport.md): the transport delay line shifts
+*observations only*.  Ground-truth physics — result arrival times
+``outs["tr"]``, helper idle, completion extraction, decode success — stay
+time-exact; what moves is when the policy hooks *learn* about them
+(``ctx.tr_ok``/``ctx.rtt_ack``/``ctx.tr_prev`` become observed instants,
+and ``decode_t_done`` becomes a master-*observed* bound).  With
+``rtt_mean = 0`` the observed and physical instants coincide bit-for-bit,
+so the transport-enabled scan is bitwise the idealized engine.
+"""
+
+from .delay import observation_delay
+from .rtt import RTT_DISTS, draw_rtt_tables
+from .tfrc import loss_event_update, tfrc_send_interval
+
+__all__ = [
+    "RTT_DISTS",
+    "draw_rtt_tables",
+    "loss_event_update",
+    "observation_delay",
+    "tfrc_send_interval",
+]

@@ -1,0 +1,49 @@
+"""The feedback delay line: when does the controller *observe* an event?
+
+A result that physically reaches the collector at ``tr`` is observed by
+the pacing controller at ``tr + observation_delay``: one feedback RTT,
+doubled when the ACK itself is lost — the controller times out and the
+collector answers the NACK-style retransmission request one further RTT
+later (the retransmitted ACK is assumed delivered; chaining more rounds
+changes the tail, not the model, and is noted in docs/transport.md).
+
+ACK loss composes with the data plane's loss processes: the feedback
+share of the channel fades with the same Gilbert–Elliott chain state that
+governs data loss at this step (the step-aligned idealization — the ACK
+of packet i rides the step-i chain state, mirroring how the decoder
+absorbs step-aligned arrivals), plus the i.i.d. ``drop_prob`` floor:
+
+    p_ack = p_drop + l_state - p_drop * l_state      (union of the two)
+
+Everything is shaped so the fleet can broadcast: ``rtt_fb``/``ack_u`` may
+carry a leading tenant axis (T, N) while the chain state stays (N,).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["observation_delay"]
+
+
+def observation_delay(rtt_fb, ack_u, p_drop, ge_bad=None, ge_params=None):
+    """Observation lag of this step's feedback, elementwise over helpers.
+
+    rtt_fb:    feedback RTT samples — (N,) or (T, N).
+    ack_u:     ACK-loss uniforms, same shape as ``rtt_fb``.
+    p_drop:    scalar i.i.d. loss floor (ChurnConfig.drop_prob).
+    ge_bad:    (N,) bool Gilbert–Elliott state at this step, or None.
+    ge_params: (4,) shared or (4, N) per-helper GE parameters, or None.
+
+    Returns the delay to add to every observed instant: ``rtt_fb`` on a
+    clean ACK, ``2 * rtt_fb`` when the ACK was lost and NACK-retransmitted.
+    With ``rtt_fb == 0`` the result is exactly ``0.0`` — the bit-for-bit
+    RTT=0 guarantee rests on ``x + 0.0 == x`` for the engine's
+    non-negative times.
+    """
+    p_ack = p_drop
+    if ge_bad is not None:
+        l_state = jnp.where(ge_bad, ge_params[3], ge_params[2])
+        p_ack = p_ack + l_state - p_ack * l_state
+    ack_lost = ack_u < p_ack
+    return rtt_fb * (1.0 + ack_lost)

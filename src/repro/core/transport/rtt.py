@@ -1,0 +1,57 @@
+"""Per-helper feedback-RTT processes (ChurnConfig ``rtt_*`` knobs).
+
+The feedback RTT of helper n at packet i factors as ``rtt_base[n] *
+rtt_jit[n, i]``: a static per-helper base (heterogeneous control paths —
+``rtt_het`` spreads helpers uniformly in ``rtt_mean * [1 - het, 1 + het]``)
+times a unit-mean per-packet jitter drawn by regime:
+
+  'fixed'      — no jitter (deterministic control path).
+  'lognormal'  — log-normal, mean 1, log-std ``rtt_sigma`` (WAN queueing
+                 jitter, cf. the wireless setting of arXiv:2004.14170).
+  'cell'       — occasional cellular latency spikes: with prob
+                 ``rtt_spike_prob`` the sample is ``rtt_spike_scale`` x
+                 the base (RRC state promotions / bufferbloat events),
+                 else 1.
+
+The factorization is what lets the fleet share the per-helper base across
+tenants (a helper's control path is a helper property, like ``mu``) while
+each tenant draws independent per-packet jitter — task 0 of a fleet then
+multiplies exactly the single-task operands, preserving the equivalence
+spine.  All draws come from a key folded off the main dynamics key, so
+enabling transport never perturbs the existing churn tables.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["RTT_DISTS", "draw_rtt_tables"]
+
+#: 'off' disables the transport path entirely (the structural knob the
+#: engine scans specialize on via ``ChurnConfig.static_key()``).
+RTT_DISTS = ("off", "fixed", "lognormal", "cell")
+
+
+def draw_rtt_tables(key, ch, N: int, M: int) -> dict:
+    """Transport tables for one rep: ``rtt_base`` (N,) per-helper base RTT,
+    ``rtt_jit`` (N, M) unit-mean per-packet jitter, and ``ack_u`` (N, M)
+    uniforms for the ACK-loss draw (:func:`repro.core.transport.delay.
+    observation_delay`).  ``ch`` is the :class:`~repro.core.simulator.
+    ChurnConfig` carrying the ``rtt_*`` knobs."""
+    kb, kj, ka = jax.random.split(key, 3)
+    het = ch.rtt_het
+    base = ch.rtt_mean * (
+        1.0 + het * (2.0 * jax.random.uniform(kb, (N,)) - 1.0))
+    if ch.rtt_dist == "lognormal":
+        # exp(sigma z - sigma^2/2): unit mean, log-std rtt_sigma.
+        mu_log = -0.5 * ch.rtt_sigma ** 2
+        z = jax.random.normal(kj, (N, M))
+        jit = jnp.exp(mu_log + ch.rtt_sigma * z)
+    elif ch.rtt_dist == "cell":
+        spike = jax.random.bernoulli(kj, ch.rtt_spike_prob, (N, M))
+        jit = jnp.where(spike, np.float32(ch.rtt_spike_scale), 1.0)
+    else:  # 'fixed'
+        jit = jnp.ones((N, M))
+    return dict(rtt_base=base, rtt_jit=jit, ack_u=jax.random.uniform(ka, (N, M)))

@@ -1,0 +1,65 @@
+"""TFRC (RFC 5348) pacing primitives for the ``tfrc_ccp`` policy.
+
+The TFRC throughput equation bounds the allowed sending rate by what a
+conformant TCP flow would achieve at loss-event rate ``p`` and RTT ``R``:
+
+    X = s / (R*sqrt(2bp/3) + t_RTO * (3*sqrt(3bp/8)) * p * (1 + 32 p^2))
+
+With the RFC-recommended simplifications ``b = 1`` and ``t_RTO = 4R`` the
+packet size ``s`` cancels from the *send interval* (s / X):
+
+    interval(p, R) = R * (sqrt(2p/3) + 12 * sqrt(3p/8) * p * (1 + 32 p^2))
+
+which is what :func:`tfrc_send_interval` computes — ``0`` at ``p = 0``
+(no throttle; the policy's CCP pacing rules), growing like ``R*sqrt(p)``
+for small ``p`` and like ``R*p^3`` once timeouts dominate.
+
+The loss-EVENT rate estimator is TFRC's key difference from a raw loss
+fraction: losses within one RTT of the first loss of an event count as
+ONE congestion signal (a radio fade or a drop-tail burst is a single
+event however many packets it ate).  :func:`loss_event_update` maintains
+a scan-carried EWMA of the per-packet new-event indicator — decayed on
+every delivered packet, bumped only when a loss starts a *new* event —
+an O(1)-state stand-in for the RFC's eight-interval weighted average
+that keeps the estimator vmap/scan-safe.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["loss_event_update", "tfrc_send_interval"]
+
+
+def tfrc_send_interval(p, rtt):
+    """Minimum allowed send interval at loss-event rate ``p`` and RTT
+    estimate ``rtt`` (elementwise, (N,) arrays): the inverse of the RFC
+    5348 throughput equation with b=1 and t_RTO=4*RTT (see module doc)."""
+    p = jnp.clip(p, 0.0, 1.0)
+    return rtt * (jnp.sqrt(2.0 * p / 3.0)
+                  + 12.0 * jnp.sqrt(3.0 * p / 8.0) * p * (1.0 + 32.0 * p * p))
+
+
+def loss_event_update(p_ev, ev_start, lost, received, tx, rtt, *, w):
+    """One scan step of the loss-event-rate estimator.
+
+    p_ev:     (N,) current loss-event-rate EWMA.
+    ev_start: (N,) send instant of the first loss of the current event
+              (-inf before any loss).
+    lost:     (N,) bool — this packet was lost.
+    received: (N,) bool — this packet was delivered.
+    tx:       (N,) this packet's send instant.
+    rtt:      (N,) RTT estimate: losses within ``rtt`` of ``ev_start``
+              collapse into the ongoing event.
+    w:        EWMA weight.
+
+    Returns ``(p_ev, ev_start)``.  A delivered packet decays the rate; a
+    loss that starts a new event bumps it; a loss inside the ongoing
+    event window — and a never-sent slot — is neutral (already counted /
+    not a sample).
+    """
+    new_event = lost & (tx > ev_start + rtt)
+    p_next = jnp.where(
+        new_event, w + (1.0 - w) * p_ev,
+        jnp.where(received, (1.0 - w) * p_ev, p_ev))
+    return p_next, jnp.where(new_event, tx, ev_start)

@@ -81,6 +81,49 @@ def test_run_smoke_fig_churn(tmp_path):
         assert "soliton_failure" in r and "offline" in r
 
 
+def test_run_smoke_fig_transport(tmp_path):
+    """The transport figure runs end-to-end in the smoke lane: all three
+    churn/RTT regimes, ``meta.rtt`` provenance, and the physics anchors —
+    the open-loop ``best`` curve is flat (delayed observation cannot touch
+    it), feedback policies pay for RTT, and at the highest-RTT burst
+    point ``tfrc_ccp``'s event-rate response completes no later than
+    ``ccp``'s reflexive backoff."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["BENCH_OUT_DIR"] = str(tmp_path)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke",
+         "--only", "fig_transport"],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1800,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert any(l.startswith("fig_transport,")
+               for l in proc.stdout.splitlines())
+
+    doc = json.loads((tmp_path / "fig_transport.json").read_text())
+    assert doc["meta"]["key_schedule"] == "fold_in"
+    assert set(doc["meta"]["policy"]) == {"ccp", "tfrc_ccp", "best"}
+    # meta.rtt provenance: the swept means and each regime's RTT process
+    rtt_meta = doc["meta"]["rtt"]
+    assert rtt_meta["sweep"] == [0.0, 4.0]
+    assert rtt_meta["regimes"]["iid"]["rtt_dist"] == "fixed"
+    assert rtt_meta["regimes"]["burst"]["rtt_dist"] == "lognormal"
+    assert rtt_meta["regimes"]["cell"]["rtt_dist"] == "cell"
+    rows = doc["data"]
+    assert {r["sweep"] for r in rows} == {"iid", "burst", "cell"}
+    by = {(r["sweep"], r["rtt_mean"]): r for r in rows}
+    for sweep in ("iid", "burst", "cell"):
+        lo, hi = by[(sweep, 0.0)], by[(sweep, 4.0)]
+        # open-loop pacing never reads the feedback: flat by construction
+        assert hi["best"]["mean"] == lo["best"]["mean"], sweep
+        # feedback pacing must pay for late observations
+        assert hi["ccp"]["mean"] > lo["ccp"]["mean"], sweep
+    # the TFRC acceptance anchor: at the highest-RTT burst point the
+    # loss-event response is no slower than the per-loss backoff cascade
+    hi = by[("burst", 4.0)]
+    assert hi["tfrc_ccp"]["mean"] <= hi["ccp"]["mean"] * (1 + 1e-6), hi
+
+
 def test_run_smoke_fig_fleet(tmp_path):
     """The fleet saturation sweep runs end-to-end in the smoke lane and
     its artifact carries the fleet meta (policy versions + discipline).

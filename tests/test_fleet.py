@@ -360,6 +360,107 @@ def test_fleet_config_validation():
 
 
 # ---------------------------------------------------------------------------
+# Input validation: run_fleet (satellite of the transport PR)
+# ---------------------------------------------------------------------------
+
+def test_run_fleet_rejects_non_fleetconfig():
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    with pytest.raises(TypeError, match="FleetConfig"):
+        ENG.run_fleet(cfg, "ccp", simulator.batch_keys(2), 10,
+                      fleet={"n_tasks": 2})
+
+
+def test_run_fleet_rejects_unknown_placement_with_known_list():
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    fc = fleet.FleetConfig(n_tasks=2, placement="nearest")
+    with pytest.raises(ValueError) as e:
+        ENG.run_fleet(cfg, "ccp", simulator.batch_keys(2), 10, fleet=fc)
+    msg = str(e.value)
+    assert "nearest" in msg and "striped" in msg and "register" in msg
+
+
+def test_run_fleet_rejects_oversubscribed_recruitment():
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    fc = fleet.FleetConfig(n_tasks=2, helpers_per_task=9)
+    with pytest.raises(ValueError, match="helpers_per_task"):
+        ENG.run_fleet(cfg, "ccp", simulator.batch_keys(2), 10, fleet=fc)
+
+
+def test_run_fleet_shares_run_validation():
+    """run_fleet goes through the same R / keys / policy checks as run."""
+    cfg = simulator.ScenarioConfig(N=4, scenario=1)
+    with pytest.raises((ValueError, TypeError), match="R must be"):
+        ENG.run_fleet(cfg, "ccp", simulator.batch_keys(2), 0)
+    with pytest.raises(ValueError, match="batch_keys"):
+        ENG.run_fleet(cfg, "ccp", jnp.zeros((0, 2), jnp.uint32), 10)
+    with pytest.raises(ValueError) as e:
+        ENG.run_fleet(cfg, "cpp", simulator.batch_keys(2), 10)
+    assert "ccp" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet batch (satellite: run_fleet(shard=True))
+# ---------------------------------------------------------------------------
+
+def test_run_fleet_shard_single_device_matches_vmap():
+    """shard=True on one device must still be bitwise the vmap path (the
+    mesh is degenerate but the shard_map machinery is exercised, padding
+    included: 3 reps on 1 device)."""
+    cfg = simulator.ScenarioConfig(N=6, scenario=1, churn=CHURN)
+    fc = fleet.FleetConfig(n_tasks=2, placement="striped",
+                           helpers_per_task=4)
+    keys = simulator.batch_keys(3)
+    r_vmap = ENG.run_fleet(cfg, "ccp", keys, 30, fleet=fc)
+    r_shard = ENG.run_fleet(cfg, "ccp", keys, 30, fleet=fc, shard=True)
+    for f in SPINE_FIELDS + ("sojourn", "release", "fairness"):
+        assert _bitwise(r_vmap[f], r_shard[f]), f
+
+
+@pytest.mark.multidevice
+def test_run_fleet_shard_multidevice_matches_vmap():
+    """8 host devices: the sharded fleet batch is bitwise the vmap batch,
+    including a batch size that does not divide the device count."""
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+            " --xla_force_host_platform_device_count=8"
+        import numpy as np
+        from repro.core import engine, fleet, simulator
+
+        eng = engine.Engine()
+        ch = simulator.ChurnConfig(
+            period=5.0, p_down=0.15, p_slow=0.25, drop_prob=0.05,
+            ge_p_bad=0.03, ge_p_good=0.25, ge_loss_bad=0.5,
+            rtt_dist="fixed", rtt_mean=0.5, max_backoff=8.0)
+        cfg = simulator.ScenarioConfig(N=6, scenario=1, churn=ch)
+        fc = fleet.FleetConfig(n_tasks=3, placement="striped",
+                               helpers_per_task=3)
+        keys = simulator.batch_keys(11)  # deliberately not a multiple of 8
+        a = eng.run_fleet(cfg, "ccp", keys, 30, fleet=fc)
+        b = eng.run_fleet(cfg, "ccp", keys, 30, fleet=fc, shard=True)
+        for f in ("T", "efficiency", "r_n", "valid", "max_backoff",
+                  "lost_frac", "sojourn", "release", "fairness"):
+            x, y = np.asarray(a[f]), np.asarray(b[f])
+            assert x.shape == y.shape, (f, x.shape, y.shape)
+            assert np.array_equal(x, y, equal_nan=(x.dtype.kind == "f")), f
+        print("SHARD-OK")
+        """
+    )
+    import os
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=str(pathlib.Path(__file__).parent.parent), timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARD-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
 # Contention observables reach the policy hooks
 # ---------------------------------------------------------------------------
 

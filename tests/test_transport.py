@@ -1,0 +1,362 @@
+"""Transport-layer tests: RTT processes, observation delay, TFRC pacing.
+
+The load-bearing guarantee is **RTT=0 transparency**: enabling the
+transport layer with ``rtt_mean = 0`` must be bit-for-bit the engine
+without it, for every registered policy, on the static and churn paths,
+single-task and fleet.  The transport tables are drawn from a folded key
+(``fold_in(key, 0x577)``) so enabling them never perturbs the existing
+churn draws — that, plus ``x + 0.0 == x`` in IEEE float32, is the whole
+proof, and these tests pin it.
+
+On top of that: the delayed-observation property (open-loop policies are
+*bitwise invariant* under any RTT; ground-truth certification never
+changes), golden replay of the PR-2 goldens through the transport-enabled
+scan, tfrc_ccp == ccp at zero loss, and unit tests of the RTT draw /
+delay / TFRC equation kernels.
+"""
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, policies, simulator
+from repro.core import transport
+
+pytestmark = pytest.mark.transport
+
+ENG = engine.Engine()
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "policy_equivalence.json")
+    .read_text()
+)
+
+# Fields that must agree bitwise between transport-off and rtt0 runs.
+SPINE_FIELDS = ("T", "efficiency", "r_n", "valid", "max_backoff",
+                "lost_frac")
+
+# A churn mix exercising every loss process the ACK path composes with
+# (iid drop, GE bursts, outages, cell events).
+CHURN = simulator.ChurnConfig(
+    period=5.0, p_down=0.1, p_slow=0.2, drop_prob=0.05,
+    ge_p_bad=0.03, ge_p_good=0.25, ge_loss_bad=0.5,
+    p_cell=0.05, cell_frac=0.5, max_backoff=8.0)
+
+# Policies whose pacing never reads tr_ok / rtt_ack / decoder feedback —
+# delayed observation cannot change a single bit of their runs.
+OPEN_LOOP = ("best", "uncoded_mean", "uncoded_mu", "hcmm")
+
+
+def _bitwise(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return np.array_equal(a, b, equal_nan=True)
+    return np.array_equal(a, b)
+
+
+def _with_rtt(ch, **kw):
+    base = dict(rtt_dist="fixed", rtt_mean=0.0)
+    base.update(kw)
+    return dataclasses.replace(ch, **base)
+
+
+# ---------------------------------------------------------------------------
+# Config surface
+# ---------------------------------------------------------------------------
+
+def test_churn_config_validates_rtt_fields():
+    with pytest.raises(ValueError, match="rtt_dist"):
+        simulator.ChurnConfig(rtt_dist="gaussian")
+    with pytest.raises(ValueError, match="rtt_mean"):
+        simulator.ChurnConfig(rtt_dist="fixed", rtt_mean=-1.0)
+    with pytest.raises(ValueError, match="rtt_het"):
+        simulator.ChurnConfig(rtt_dist="fixed", rtt_mean=1.0, rtt_het=1.5)
+
+
+def test_rtt_enabled_and_neutral():
+    assert not simulator.ChurnConfig().rtt_enabled
+    ch = simulator.ChurnConfig(rtt_dist="fixed", rtt_mean=1.0)
+    assert ch.rtt_enabled
+    # transport with a real delay breaks neutrality (the engine must take
+    # the churn path), but rtt_mean=0 transport keeps a neutral cfg neutral
+    assert not ch.neutral
+    assert simulator.ChurnConfig(rtt_dist="fixed", rtt_mean=0.0).neutral
+
+
+def test_static_key_carries_rtt_dist():
+    a = simulator.ChurnConfig().static_key()
+    b = simulator.ChurnConfig(rtt_dist="cell", rtt_mean=1.0).static_key()
+    assert len(a) == 6 and len(b) == 6
+    assert a[-1] == "off" and b[-1] == "cell"
+
+
+# ---------------------------------------------------------------------------
+# RTT draw / observation-delay kernels
+# ---------------------------------------------------------------------------
+
+def test_draw_rtt_tables_shapes_and_regimes():
+    key = jax.random.PRNGKey(0)
+    N, M = 12, 64
+    fixed = transport.draw_rtt_tables(
+        key, simulator.ChurnConfig(rtt_dist="fixed", rtt_mean=2.0), N, M)
+    assert fixed["rtt_base"].shape == (N,)
+    assert fixed["rtt_jit"].shape == (N, M)
+    assert fixed["ack_u"].shape == (N, M)
+    assert np.allclose(fixed["rtt_base"], 2.0)  # rtt_het=0 -> exactly mean
+    assert np.all(np.asarray(fixed["rtt_jit"]) == 1.0)
+
+    het = transport.draw_rtt_tables(
+        key, simulator.ChurnConfig(rtt_dist="fixed", rtt_mean=2.0,
+                                   rtt_het=0.5), N, M)
+    base = np.asarray(het["rtt_base"])
+    assert base.min() >= 1.0 - 1e-6 and base.max() <= 3.0 + 1e-6
+    assert base.std() > 0.0
+
+    logn = transport.draw_rtt_tables(
+        key, simulator.ChurnConfig(rtt_dist="lognormal", rtt_mean=2.0,
+                                   rtt_sigma=0.5), N, 4096)
+    jit = np.asarray(logn["rtt_jit"])
+    assert jit.min() > 0.0
+    assert abs(jit.mean() - 1.0) < 0.05  # unit-mean jitter
+
+    cell = transport.draw_rtt_tables(
+        key, simulator.ChurnConfig(rtt_dist="cell", rtt_mean=1.0,
+                                   rtt_spike_prob=0.25,
+                                   rtt_spike_scale=10.0), N, 4096)
+    vals = np.unique(np.asarray(cell["rtt_jit"]))
+    assert set(vals.tolist()) <= {1.0, 10.0}
+    frac = (np.asarray(cell["rtt_jit"]) == 10.0).mean()
+    assert 0.2 < frac < 0.3
+
+
+def test_observation_delay_iid_and_ge():
+    rtt = jnp.full((4,), 2.0)
+    u = jnp.array([0.01, 0.9, 0.04, 0.5])
+    # iid only: ack lost iff u < p_drop
+    d = transport.observation_delay(rtt, u, 0.05)
+    assert _bitwise(d, [4.0, 2.0, 4.0, 2.0])
+    # GE bad state raises the ACK loss prob to the composed rate
+    ge_params = (0.0, 0.0, jnp.float32(0.0), jnp.float32(0.9))
+    d = transport.observation_delay(
+        rtt, u, 0.05, ge_bad=jnp.array([True, True, False, False]),
+        ge_params=ge_params)
+    # bad: p = .05+.9-.045=0.905 -> u<p for 0.01 and 0.9 -> both lost
+    assert _bitwise(d, [4.0, 4.0, 4.0, 2.0])
+    # zero RTT: delay is exactly 0.0 whatever the loss outcome
+    assert _bitwise(
+        transport.observation_delay(jnp.zeros(4), u, 0.5), np.zeros(4))
+
+
+def test_tfrc_send_interval():
+    # p=0 -> no floor; monotone in both p and rtt
+    assert float(transport.tfrc_send_interval(0.0, 3.0)) == 0.0
+    lo = float(transport.tfrc_send_interval(0.01, 1.0))
+    hi = float(transport.tfrc_send_interval(0.1, 1.0))
+    assert 0.0 < lo < hi
+    assert float(transport.tfrc_send_interval(0.1, 2.0)) == pytest.approx(
+        2.0 * hi, rel=1e-6)
+
+
+def test_loss_event_update_collapses_within_rtt():
+    p0 = jnp.zeros(1)
+    start = jnp.full(1, -jnp.inf)
+    t, f = jnp.array([True]), jnp.array([False])
+    # first loss at tx=10: new event
+    p1, s1 = transport.loss_event_update(
+        p0, start, t, f, jnp.array([10.0]), jnp.array([2.0]), w=0.5)
+    assert float(p1[0]) == pytest.approx(0.5) and float(s1[0]) == 10.0
+    # second loss inside one RTT: same event, no bump
+    p2, s2 = transport.loss_event_update(
+        p1, s1, t, f, jnp.array([11.0]), jnp.array([2.0]), w=0.5)
+    assert float(p2[0]) == float(p1[0]) and float(s2[0]) == 10.0
+    # loss beyond one RTT: a new event bumps again
+    p3, s3 = transport.loss_event_update(
+        p2, s2, t, f, jnp.array([13.0]), jnp.array([2.0]), w=0.5)
+    assert float(p3[0]) > float(p2[0]) and float(s3[0]) == 13.0
+    # delivery decays toward zero
+    p4, _ = transport.loss_event_update(
+        p3, s3, f, jnp.array([True]), jnp.array([14.0]),
+        jnp.array([2.0]), w=0.5)
+    assert 0.0 < float(p4[0]) < float(p3[0])
+
+
+# ---------------------------------------------------------------------------
+# RTT=0 transparency: the central acceptance criterion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(policies.names()))
+def test_rtt0_bitwise_churn(name):
+    """Transport enabled at rtt_mean=0 is the bit-identical engine, for
+    every registered policy, on the full churn mix."""
+    keys = simulator.batch_keys(4)
+    cfg0 = simulator.ScenarioConfig(N=16, scenario=1, churn=CHURN)
+    cfg1 = dataclasses.replace(cfg0, churn=_with_rtt(CHURN))
+    r0 = ENG.run(cfg0, name, keys, 60)
+    r1 = ENG.run(cfg1, name, keys, 60)
+    assert r1.M == r0.M
+    for f in SPINE_FIELDS:
+        assert _bitwise(r0[f], r1[f]), (name, f)
+
+
+@pytest.mark.parametrize("rtt_dist", ["fixed", "lognormal", "cell"])
+def test_rtt0_bitwise_every_regime(rtt_dist):
+    """rtt_mean=0 kills the delay whatever jitter regime multiplies it."""
+    keys = simulator.batch_keys(3)
+    cfg0 = simulator.ScenarioConfig(N=12, scenario=1, churn=CHURN)
+    ch = _with_rtt(CHURN, rtt_dist=rtt_dist, rtt_mean=0.0, rtt_het=0.5)
+    cfg1 = dataclasses.replace(cfg0, churn=ch)
+    r0 = ENG.run(cfg0, "ccp", keys, 60)
+    r1 = ENG.run(cfg1, "ccp", keys, 60)
+    for f in SPINE_FIELDS:
+        assert _bitwise(r0[f], r1[f]), f
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_golden_replay_through_transport_scan(name):
+    """The PR-2 goldens replay bit-for-bit through the transport-enabled
+    scan at rtt_mean=0 — the strongest no-regression statement we can
+    make without re-running the pre-redesign code."""
+    g = GOLDEN[name]
+    if name.startswith("static_sc1"):
+        cfg, mode = (simulator.ScenarioConfig(N=20, scenario=1),
+                     name.split("_")[-1])
+        ch = simulator.ChurnConfig()
+    elif name.startswith("static_sc2"):
+        cfg, mode = simulator.ScenarioConfig(N=20, scenario=2), "ccp"
+        ch = simulator.ChurnConfig()
+    else:
+        ch = simulator.ChurnConfig(
+            period=5.0, p_down=0.1, p_slow=0.2, drop_prob=0.05,
+            ge_p_bad=0.02, ge_p_good=0.2, ge_loss_bad=0.5,
+            p_cell=0.1, cell_frac=0.5, outage_dist="lognormal",
+            outage_mean=4.0, outage_sigma=0.5, max_backoff=8.0)
+        cfg, mode = (simulator.ScenarioConfig(N=16, scenario=1, churn=ch),
+                     name[len("churn_"):])
+    # rtt0 transport on a *neutral* base cfg keeps it neutral (static
+    # path); on a churn cfg it threads the delay line at delay == 0.0.
+    cfg = dataclasses.replace(cfg, churn=_with_rtt(ch))
+    keys = simulator.batch_keys(g["reps"], seed0=g.get("seed0", 0))
+    res = ENG.run(cfg, policies.get(mode), keys, g["R"], M_override=g["M"])
+    assert _bitwise(np.float32(np.asarray(g["T"])), np.float32(res.T)), name
+    assert _bitwise(np.asarray(g["r_n"]), res.r_n), name
+    assert _bitwise(np.float32(np.asarray(g["efficiency"])),
+                    np.float32(res.efficiency)), name
+    assert _bitwise(np.asarray(g["valid"]), res.valid), name
+
+
+# ---------------------------------------------------------------------------
+# Delayed-observation properties at RTT > 0
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", OPEN_LOOP)
+def test_open_loop_policies_invariant_under_delay(name):
+    """Open-loop pacing (tx + beta / tx + d_up) never reads the observed
+    feedback, so any RTT leaves their entire run — ground-truth T and
+    certification included — bit-for-bit unchanged."""
+    keys = simulator.batch_keys(4)
+    cfg0 = simulator.ScenarioConfig(N=16, scenario=1, churn=CHURN)
+    ch = _with_rtt(CHURN, rtt_dist="lognormal", rtt_mean=2.0, rtt_het=0.5)
+    cfg1 = dataclasses.replace(cfg0, churn=ch)
+    r0 = ENG.run(cfg0, name, keys, 60)
+    r1 = ENG.run(cfg1, name, keys, 60)
+    for f in SPINE_FIELDS:
+        assert _bitwise(r0[f], r1[f]), (name, f)
+
+
+@pytest.mark.parametrize("name", ["ccp", "naive_oracle", "rateless_ccp"])
+def test_delay_slows_feedback_policies_but_stays_certified(name):
+    """Feedback-paced policies *must* pay for late observations (strictly
+    larger mean T), but ground truth stays exact: every rep remains
+    certified and the physical completion is still extracted from the
+    time-exact trace."""
+    keys = simulator.batch_keys(4)
+    cfg0 = simulator.ScenarioConfig(N=16, scenario=1, churn=CHURN)
+    ch = _with_rtt(CHURN, rtt_dist="lognormal", rtt_mean=2.0)
+    cfg1 = dataclasses.replace(cfg0, churn=ch)
+    r0 = ENG.run(cfg0, name, keys, 60)
+    r1 = ENG.run(cfg1, name, keys, 60)
+    assert np.asarray(r0.valid).all() and np.asarray(r1.valid).all()
+    assert np.asarray(r1.T).mean() > np.asarray(r0.T).mean()
+
+
+def test_ack_loss_doubles_delay_under_pure_drop():
+    """With fixed RTT and iid drop only, every observation delay is
+    exactly rtt or 2*rtt (the NACK retransmission round)."""
+    ch = simulator.ChurnConfig(drop_prob=0.3, rtt_dist="fixed",
+                               rtt_mean=1.5)
+    cfg = simulator.ScenarioConfig(N=8, scenario=1, churn=ch)
+    dyn = simulator.draw_dynamics(jax.random.PRNGKey(7), cfg, 64)
+    d = transport.observation_delay(
+        dyn["rtt_base"][:, None] * dyn["rtt_jit"], dyn["ack_u"],
+        dyn["ack_p_drop"])
+    vals = np.unique(np.asarray(d))
+    assert set(vals.tolist()) <= {1.5, 3.0}
+    lost_frac = (np.asarray(d) == 3.0).mean()
+    assert 0.2 < lost_frac < 0.4
+
+
+# ---------------------------------------------------------------------------
+# tfrc_ccp
+# ---------------------------------------------------------------------------
+
+def test_tfrc_registered():
+    assert "tfrc_ccp" in policies.names()
+    p = policies.get("tfrc_ccp")
+    assert isinstance(p, policies.TFRCCCPPolicy)
+    assert p == policies.get("tfrc_ccp") and hash(p) == hash(p)
+
+
+@pytest.mark.parametrize("rtt_mean", [0.0, 2.0])
+def test_tfrc_equals_ccp_at_zero_loss(rtt_mean):
+    """No losses -> p_ev stays 0 -> the TFRC floor is tx itself and the
+    backoff never engages: tfrc_ccp is bitwise ccp at any RTT."""
+    ch = simulator.ChurnConfig(p_down=0.1, p_slow=0.2,
+                               rtt_dist="fixed", rtt_mean=rtt_mean)
+    cfg = simulator.ScenarioConfig(N=12, scenario=1, churn=ch)
+    keys = simulator.batch_keys(4)
+    r_ccp = ENG.run(cfg, "ccp", keys, 60)
+    r_tfrc = ENG.run(cfg, "tfrc_ccp", keys, 60)
+    for f in SPINE_FIELDS:
+        assert _bitwise(r_ccp[f], r_tfrc[f]), f
+
+
+def test_tfrc_measures_loss_events():
+    """Under burst loss the summary's p_ev lands in (0, 1): the estimator
+    is alive and bounded."""
+    ch = simulator.ChurnConfig(
+        period=10.0, ge_p_bad=0.08, ge_p_good=0.15, ge_loss_bad=0.95,
+        rtt_dist="fixed", rtt_mean=1.0, max_backoff=8.0)
+    cfg = simulator.ScenarioConfig(N=12, scenario=1, churn=ch)
+    res = ENG.run(cfg, "tfrc_ccp", simulator.batch_keys(3), 80)
+    p_ev = np.asarray(res.extras["p_ev"])
+    assert p_ev.shape == (3, 12)
+    assert p_ev.min() >= 0.0 and p_ev.max() <= 1.0
+    assert p_ev.max() > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Fleet path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fleet
+@pytest.mark.parametrize("name", ["ccp", "tfrc_ccp", "rateless_ccp"])
+def test_fleet_m1_equals_single_task_with_transport(name):
+    """The fleet scan threads the same delay line: a 1-task fleet under
+    transport churn is bitwise the dedicated engine (shared rtt_base,
+    task-0 jitter — the same elementwise product)."""
+    ch = _with_rtt(CHURN, rtt_dist="lognormal", rtt_mean=1.0, rtt_het=0.3)
+    cfg = simulator.ScenarioConfig(N=8, scenario=1, churn=ch)
+    keys = simulator.batch_keys(3)
+    res1 = ENG.run(cfg, name, keys, 40)
+    resf = ENG.run_fleet(cfg, name, keys, 40)
+    for f in SPINE_FIELDS:
+        a = np.asarray(res1[f])
+        b = np.asarray(resf[f])
+        if b.ndim > a.ndim:
+            b = b[:, 0]
+        assert _bitwise(a, b), (name, f)
